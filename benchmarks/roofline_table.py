@@ -1,0 +1,80 @@
+"""The 40-cell roofline table: every (arch x shape) on the single-pod
+16x16 mesh — analytic (TPU-expected) terms as primary, HLO-CPU-derived
+terms from the dry-run artifacts alongside (see DESIGN.md for why the CPU
+backend's cost_analysis undercounts scan bodies).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.launch.dryrun import ART_DIR
+from repro.models import lm
+from repro.roofline import analysis, analytic
+
+MESH = {"data": 16, "model": 16}
+
+
+@functools.lru_cache(maxsize=None)
+def _param_counts(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(functools.partial(lm.init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    n = analysis.count_params_from_shapes(shapes)
+    return n, analysis.active_param_count(cfg, n)
+
+
+def cell_roofline(arch, shape_name, serve_mode="cfmm"):
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape_name)
+    if not ok:
+        return {"skipped": True, "reason": why}
+    n, n_active = _param_counts(arch)
+    step = SHAPES[shape_name]["step"]
+    mflops = analysis.model_flops_for(cfg, n, n_active, SHAPES[shape_name],
+                                      step)
+    roof = analytic.roofline_of(cfg, shape_name, MESH, n, n_active,
+                                serve_mode, mflops)
+    rec = roof.to_dict()
+    rec["arch"], rec["shape"], rec["step"] = arch, shape_name, step
+    # attach the HLO-derived terms from the dry-run artifact if present
+    art = ART_DIR / "single" / f"{arch}__{shape_name}.json"
+    if art.exists():
+        d = json.loads(art.read_text())
+        if "roofline" in d:
+            rec["hlo"] = {k: d["roofline"][k] for k in
+                          ("compute_s", "memory_s", "collective_s",
+                           "dominant")}
+            rec["compile_s"] = d.get("compile_s")
+    return rec
+
+
+def run(full=False, serve_mode="cfmm"):
+    rows = []
+    print(f" {'arch':22s} {'shape':12s} {'dom':11s} {'compute_s':>10s} "
+          f"{'memory_s':>10s} {'coll_s':>10s} {'roofline%':>9s}")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            rec = cell_roofline(arch, shape, serve_mode)
+            if rec.get("skipped"):
+                print(f" {arch:22s} {shape:12s} SKIP ({rec['reason'][:40]}...)")
+                rows.append({"arch": arch, "shape": shape, **rec})
+                continue
+            print(f" {arch:22s} {shape:12s} {rec['dominant']:11s} "
+                  f"{rec['compute_s']:10.2e} {rec['memory_s']:10.2e} "
+                  f"{rec['collective_s']:10.2e} "
+                  f"{100 * rec['roofline_fraction']:8.1f}%")
+            rows.append(rec)
+    # headline aggregates
+    live = [r for r in rows if not r.get("skipped")]
+    worst = min(live, key=lambda r: r["roofline_fraction"])
+    coll = max(live, key=lambda r: r["collective_s"] /
+               max(r["compute_s"] + r["memory_s"], 1e-12))
+    print(f"\n worst roofline fraction: {worst['arch']}/{worst['shape']} "
+          f"({100 * worst['roofline_fraction']:.1f}%)")
+    print(f" most collective-bound:  {coll['arch']}/{coll['shape']}")
+    return {"mesh": "16x16", "serve_mode": serve_mode, "rows": rows}

@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure plus the
+roofline table and kernel micro-benchmarks.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Outputs land in experiments/bench/ and are summarized to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger kernel sweeps / serving runs")
+    args = ap.parse_args(argv)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    from benchmarks import fig7, kernel_bench, roofline_table, serving_bench, \
+        table1, table2
+
+    t0 = time.time()
+    results = {}
+    for name, mod in [("table1_design_params", table1),
+                      ("table2_kernel_results", table2),
+                      ("fig7_partitioning", fig7),
+                      ("roofline_40cells", roofline_table),
+                      ("kernel_bench", kernel_bench),
+                      ("serving_bench", serving_bench)]:
+        t = time.time()
+        print(f"\n=== {name} ===", flush=True)
+        res = mod.run(full=args.full)
+        results[name] = res
+        (OUT_DIR / f"{name}.json").write_text(
+            json.dumps(res, indent=1, default=str))
+        print(f"[{name}: {time.time() - t:.1f}s]", flush=True)
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s; "
+          f"artifacts in {OUT_DIR}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Serving throughput benchmark: tokens/s on the continuous-batching
+engine across compiled-weight modes (tiny model; CPU numbers are relative
+signals, the roofline table carries the TPU projections)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.launch.train import build_cfg
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+
+def run(full=False):
+    cfg = build_cfg("smollm_360m", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    n_req = 8 if full else 4
+    out = {}
+    for mode in ("dense", "int8"):
+        engine = ServingEngine(cfg, params, mode=mode, batch_slots=4,
+                               max_seq=64)
+        reqs = [Request(rid=i, prompt=list(rng.randint(1, cfg.vocab, 12)),
+                        max_new_tokens=12) for i in range(n_req)]
+        engine.run(reqs[:1])          # warm up compile
+        reqs = [Request(rid=i, prompt=list(rng.randint(1, cfg.vocab, 12)),
+                        max_new_tokens=12) for i in range(n_req)]
+        t0 = time.time()
+        engine.run(reqs)
+        dt = time.time() - t0
+        toks = sum(len(r.tokens_out) for r in reqs)
+        out[mode] = {"tok_s": toks / dt, "tokens": toks, "wall_s": dt}
+        print(f" mode={mode:6s} {toks} tokens @ {toks / dt:7.1f} tok/s")
+    return out

@@ -1,0 +1,94 @@
+"""The paper, end to end: compile a sparse INT7 ResNet50 and reproduce
+its tables.
+
+1. Build ResNet50 (the paper's network), quantize + prune per SS II-A.
+2. Reproduce Table I (design parameters) exactly from the architecture.
+3. Reproduce Table II structure from the calibrated FPGA cost model
+   (fold=4 for conv5, 4-instance 127k-ALM conv2 kernels...).
+4. Reproduce the Fig 7 multi-chip partitioning and compare with the
+   paper's projection and the V100 bound.
+5. Run the compiled (sparse INT7) model vs the fp32 baseline on a batch
+   and report logit agreement — the "0.22% accuracy delta" proxy that is
+   checkable without ImageNet.
+
+Run:  PYTHONPATH=src python examples/compile_resnet50.py [--width 0.25]
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core import partition
+from repro.core.compiled_linear import compile_params
+from repro.core.fpga_model import table2_model
+from repro.models import resnet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=float, default=0.25,
+                    help="width multiplier for the runnable demo model")
+    ap.add_argument("--hw", type=int, default=64)
+    args = ap.parse_args()
+
+    print("=== Table I: key design parameters (exact reproduction) ===")
+    t1 = resnet.table1()
+    print(json.dumps(t1, indent=1))
+    assert t1["conv2_x"]["mac_per_param"] == 3136
+    assert t1["conv5_x"]["mac_per_param"] == 49
+    assert all(row["total_macs_m"] == 218 for row in t1.values())
+
+    print("=== Table II: calibrated cost model vs actuals ===")
+    t2 = table2_model()
+    for corner in ("conv2", "conv5"):
+        m, a = t2[corner]["model"], t2[corner]["actual"]
+        print(f" {corner}: fold model={m['fold']} actual={a['folding']} | "
+              f"ALM/kernel model={m['alm_per_kernel']/1e3:.0f}k "
+              f"actual={a['alm_per_kernel']/1e3:.0f}k | "
+              f"MOPs/ALM model={m['mops_per_alm']:.0f} actual={a['mops_per_alm']}")
+
+    print("=== Fig 7: multi-chip partitioning ===")
+    f7 = partition.fig7_projection()
+    print(json.dumps({k: f7[k] for k in ("at_paper_target", "model_best",
+                                         "gx550_scaling")},
+                     indent=1, default=lambda o: round(o, 2)))
+
+    print("=== Compiled sparse-INT7 ResNet50 vs fp32 sparse baseline ===")
+    # The paper starts from an ALREADY 80%-sparse model (Movidius/AMC);
+    # we emulate that by pre-pruning, then measure what compilation adds
+    # (INT7 quantization) — the analogue of the paper's 0.22% delta.
+    cfg = resnet.ResNetConfig(width_mult=args.width, num_classes=100,
+                              in_hw=args.hw)
+    params = resnet.init(jax.random.PRNGKey(0), cfg)
+
+    def presparsify(p):
+        if isinstance(p, nn.Param) and p.kind == "linear" and p.value.ndim == 2:
+            from repro.core.compiled_linear import balanced_prune_codes
+            keep = max(8, int(p.value.shape[0] * 0.2) // 8 * 8)
+            qt = balanced_prune_codes(p.value.astype(jnp.float32), keep)
+            return nn.Param(qt.dequantize().astype(p.value.dtype) * 0 +
+                            jnp.where(qt.values != 0, p.value, 0.0),
+                            p.axes, p.kind)
+        return p
+
+    sparse_params = jax.tree.map(presparsify, params,
+                                 is_leaf=lambda x: isinstance(x, nn.Param))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, args.hw, args.hw, 3))
+    ref = resnet.apply(nn.unbox(sparse_params), x, cfg)
+    compiled = nn.unbox(compile_params(sparse_params, mode="sparse_cfmm",
+                                       sparsity=0.8))
+    out = resnet.apply(compiled, x, cfg)
+    top1_match = float(jnp.mean((jnp.argmax(out, -1) ==
+                                 jnp.argmax(ref, -1)).astype(jnp.float32)))
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    print(f" compilation (INT7) error on the sparse model: logits rel err "
+          f"{rel:.4f}; top-1 agreement {top1_match:.0%} "
+          f"(paper: 0.22% top-1 delta)")
+    print("compile_resnet50 OK")
+
+
+if __name__ == "__main__":
+    main()

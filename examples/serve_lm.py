@@ -1,0 +1,43 @@
+"""Batched serving example: all four compiled-weight modes side by side.
+
+Serves the same request batch with dense bf16, INT7 (int8 storage), CFMM
+and 80%-sparse bitmap-packed weights, and reports agreement + packed
+sizes.  On TPU the cfmm/sparse modes dispatch to the Pallas kernels; here
+the jnp lowerings run (same numerics).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import nn
+from repro.launch.train import build_cfg
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+cfg = build_cfg("smollm_360m", "tiny")
+params = lm.init(jax.random.PRNGKey(0), cfg)
+rng = np.random.RandomState(0)
+prompts = [list(rng.randint(1, cfg.vocab, size=12)) for _ in range(4)]
+
+results = {}
+for mode in ("dense", "int8", "cfmm", "sparse_cfmm"):
+    engine = ServingEngine(cfg, params, mode=mode, batch_slots=2,
+                           max_seq=40)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    t0 = time.time()
+    engine.run(reqs)
+    dt = time.time() - t0
+    results[mode] = [r.tokens_out for r in reqs]
+    nbytes = sum(np.asarray(v).nbytes for v in jax.tree.leaves(engine.params))
+    print(f"mode={mode:12s} params={nbytes/1e6:6.2f} MB  "
+          f"{sum(len(t) for t in results[mode])} tokens in {dt:.1f}s")
+
+agree = np.mean([results["dense"][i] == results["int8"][i]
+                 for i in range(len(prompts))])
+print(f"dense vs int8 greedy-token agreement: {agree:.0%} "
+      f"(INT7 ~ FP32, paper: 0.22% accuracy delta)")
+print("serve_lm OK")

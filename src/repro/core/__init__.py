@@ -1,0 +1,1 @@
+from repro.core import cfmm, compiled_linear, fpga_model, partition, quantize, sparsity  # noqa: F401

@@ -1,0 +1,195 @@
+"""Common Factor Mass Multiplication (CFMM) — paper SS II-E.1.
+
+The paper's counting argument, reproduced exactly here:
+
+* an INT7 weight magnitude lies in [0, 63];
+* the **sign** is moved into the adder tree, equivalence-classing +/-w
+  (128 -> 64 unique values);
+* **even** products are a (free) left shift of an **odd** product, so only
+  the 32 odd magnitudes {1, 3, ..., 63} need computing; x0 and x1 are free.
+
+So one input activation (the *common factor*) needs at most 32 unique
+products to serve every weight that multiplies it.  On FPGA these are 30-ish
+bit-serial adders; on TPU the same decomposition becomes (a) a 32-entry odd
+LUT decode of packed weights into int8 tiles in VMEM (kernels/cfmm_matmul)
+and (b) an exact product-table + gather reference kept here as the oracle.
+
+Everything in this module is exact integer math — tests assert bit-equality
+against dense int matmuls.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import INT7_MAX
+
+# The 32 unique odd magnitudes of INT7 (paper: "a INT7 CFMM block only has
+# 32 unique products").
+ODD_VALUES = np.arange(1, INT7_MAX + 1, 2)          # [1, 3, ..., 63]
+N_UNIQUE_PRODUCTS = len(ODD_VALUES)                  # == 32
+
+# LUTs over |q| in [0, 63]: |q| = odd(mag_idx) << shift, with mag_idx in
+# [0, 32) and shift in [0, 5].  Entry 0 is a don't-care (zero weight).
+_MAG_IDX_LUT = np.zeros(INT7_MAX + 1, np.int8)
+_SHIFT_LUT = np.zeros(INT7_MAX + 1, np.int8)
+for _m in range(1, INT7_MAX + 1):
+    _v, _s = _m, 0
+    while _v % 2 == 0:
+        _v //= 2
+        _s += 1
+    _MAG_IDX_LUT[_m] = (_v - 1) // 2
+    _SHIFT_LUT[_m] = _s
+MAX_SHIFT = int(_SHIFT_LUT.max())                    # == 5
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CFMMWeights:
+    """Packed constant-parameter form of an INT7 weight tensor.
+
+    sign    in {-1, 0, +1}  (0 encodes a pruned/zero weight)
+    mag_idx in [0, 32)      index into ODD_VALUES
+    shift   in [0, 5]       left shift applied to the odd product
+    scale   per-output-channel dequant scale (f32)
+
+    reconstruct(): sign * (ODD_VALUES[mag_idx] << shift) == original int7.
+    """
+
+    sign: jax.Array      # int8
+    mag_idx: jax.Array   # int8
+    shift: jax.Array     # int8
+    scale: jax.Array     # f32 (broadcastable over the weight)
+
+    def tree_flatten(self):
+        return (self.sign, self.mag_idx, self.shift, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.sign.shape
+
+
+def decompose(q: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """INT7 codes -> (sign, mag_idx, shift).  Exact for |q| <= 63."""
+    sign = jnp.sign(q).astype(jnp.int8)
+    mag = jnp.abs(q).astype(jnp.int32)
+    mag_idx = jnp.asarray(_MAG_IDX_LUT)[mag]
+    shift = jnp.asarray(_SHIFT_LUT)[mag]
+    return sign, mag_idx, shift
+
+
+def reconstruct(sign: jax.Array, mag_idx: jax.Array, shift: jax.Array) -> jax.Array:
+    odd = jnp.asarray(ODD_VALUES, jnp.int32)[mag_idx.astype(jnp.int32)]
+    return sign.astype(jnp.int32) * (odd << shift.astype(jnp.int32))
+
+
+def pack(qt_values: jax.Array, scale: jax.Array) -> CFMMWeights:
+    sign, mag_idx, shift = decompose(qt_values)
+    return CFMMWeights(sign, mag_idx, shift, scale)
+
+
+def unpack_int8(w: CFMMWeights) -> jax.Array:
+    """LUT-decode packed weights back to dense int8 codes (VMEM-side op in
+    the Pallas kernel; here as the lowering used on non-TPU backends)."""
+    return reconstruct(w.sign, w.mag_idx, w.shift).astype(jnp.int8)
+
+
+def product_table(x_q: jax.Array) -> jax.Array:
+    """All unique odd products of each input value: the CFMM block output.
+
+    x_q: int8 activations (...,).  Returns int32 (..., 32) where
+    table[..., k] = x * ODD_VALUES[k].  One input value is the Common
+    Factor for all 32 products (paper Fig 3).
+    """
+    odd = jnp.asarray(ODD_VALUES, jnp.int32)
+    return x_q.astype(jnp.int32)[..., None] * odd
+
+
+def cfmm_matmul_exact(x_q: jax.Array, w: CFMMWeights) -> jax.Array:
+    """Product-table CFMM matmul — the faithful FPGA dataflow, exact int32.
+
+    x_q: (M, K) int8; w: packed (K, N).  For every input x[m, k] build the
+    32-product table, gather the product selected by mag_idx[k, n], apply
+    the free shift, and push the sign into the adder tree (signed add).
+    Returns (M, N) int32 == x_q @ reconstruct(w).
+
+    O(M*K*N) gather memory — this is the *oracle*; production paths use
+    kernels/cfmm_matmul (LUT decode + MXU) or block-sparse variants.
+    """
+    table = product_table(x_q)                              # (M, K, 32)
+    gathered = jnp.take_along_axis(
+        table[:, :, None, :],                               # (M, K, 1, 32)
+        w.mag_idx.astype(jnp.int32)[None, :, :, None],      # (1, K, N, 1)
+        axis=-1,
+    )[..., 0]                                               # (M, K, N)
+    shifted = gathered << w.shift.astype(jnp.int32)[None]
+    signed = shifted * w.sign.astype(jnp.int32)[None]
+    return jnp.sum(signed, axis=1)                          # adder tree over K
+
+
+def cfmm_matmul_int8(x_q: jax.Array, w) -> jax.Array:
+    """Decode-then-MXU CFMM matmul: LUT decode to int8 + int8xint8->int32 dot.
+
+    Mathematically identical to cfmm_matmul_exact; this is the TPU-native
+    dataflow (decode happens in VMEM inside the Pallas kernel).  ``w`` may
+    be packed CFMMWeights or raw int8 codes (decode is then the identity).
+    """
+    w_int8 = unpack_int8(w) if isinstance(w, CFMMWeights) else w
+    return jax.lax.dot_general(
+        x_q, w_int8,
+        dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def bitserial_matmul(x_q: jax.Array, q_codes: jax.Array) -> jax.Array:
+    """Bit-plane ("bit-serial") matmul ablation: y = sum_b 2^b * (x @ B_b).
+
+    B_b are the ternary bit-planes of the INT7 codes (quantize.ternary_
+    residual_decompose).  The closest TPU analogue of the paper's bit-serial
+    adder trees; kept for ablation/benchmarks.  Exact int32.
+    """
+    sign = jnp.sign(q_codes).astype(jnp.int32)
+    mag = jnp.abs(q_codes).astype(jnp.int32)
+    acc = jnp.zeros(x_q.shape[:-1] + (q_codes.shape[-1],), jnp.int32)
+    for b in range(6):
+        plane = (((mag >> b) & 1) * sign).astype(jnp.int8)
+        partial = jax.lax.dot_general(
+            x_q, plane,
+            dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + (partial << b)
+    return acc
+
+
+def unique_product_count(q_codes: jax.Array) -> int:
+    """Number of unique odd product magnitudes actually used by a weight
+    tensor (paper claim: <= 32 for INT7)."""
+    _, mag_idx, _ = decompose(q_codes)
+    nz = np.asarray(jnp.abs(q_codes) > 0)
+    return int(np.unique(np.asarray(mag_idx)[nz]).size) if nz.any() else 0
+
+
+def cfmm_flops_saved(q_codes: jax.Array, n_common_uses: int) -> dict:
+    """Paper SS II-E.1 accounting: multiplies amortized by the CFMM block.
+
+    A naive implementation multiplies once per (input, nonzero weight) pair;
+    CFMM computes <=32 products per input (one add each) and reuses them
+    ``n_common_uses`` times (e.g. 2304 for a 3x3x256 filter set, Fig 3).
+    """
+    nnz = int(np.asarray(jnp.sum(jnp.abs(q_codes) > 0)))
+    total = int(np.prod(q_codes.shape))
+    return {
+        "weights_total": total,
+        "weights_nonzero": nnz,
+        "sparsity": 1.0 - nnz / max(total, 1),
+        "naive_multiplies_per_cf": n_common_uses,
+        "cfmm_adds_per_cf": N_UNIQUE_PRODUCTS - 2,  # x1 free, incremental adds
+        "amortization": n_common_uses / max(N_UNIQUE_PRODUCTS - 2, 1),
+    }

@@ -1,0 +1,214 @@
+"""CompiledLinear — the paper's technique as a first-class module.
+
+Every parameterized linear map in every architecture (QKV/out projections,
+FFN/SwiGLU, MoE experts, MLA projections, Mamba/RWKV projections, conv via
+im2col, the LM head) routes through ``apply_linear``.  The weight leaf is,
+per serving compilation mode:
+
+  dense        raw bf16/f32 array                      (training / baseline)
+  int8         {'values': int8, 'scale'}                W-INT7 A-INT8 QDQ,
+               direct int8 MXU matmul (2x bf16 peak)
+  cfmm         {'codes': int8, 'scale'}                 same storage; compute
+               routed through the CFMM product-table / LUT-decode Pallas
+               kernel (kernels/cfmm_matmul) — the paper's dataflow
+  sparse_cfmm  {'bitmap': uint8, 'values': int8, 'scale'}
+               bitmap-packed constant sparsity: (1-s)*8 + 1 bits/param
+               (~2.6 bits at s=0.8 vs 16 for bf16) — the paper's
+               zero-overhead sparsity converted to a memory-bandwidth win
+  bitserial    {'codes': int8, 'scale'}, bit-plane matmul — FPGA bit-serial
+               ablation (sum_b 2^b * (x @ ternary plane_b))
+
+``compile_params`` converts a trained parameter tree into its constant-
+parameter ("Compiled NN") serving form.  It is jax-traceable, so the
+multi-pod dry-run builds packed serving params with jax.eval_shape — no
+real weights are ever allocated.
+
+Deviation from the paper (documented in DESIGN.md): pruning for
+sparse_cfmm is per-output-channel balanced (top-k per column) rather than
+globally unstructured, so the packed value buffer is rectangular with a
+static shape.  Overall sparsity is identical; the FPGA needs no such
+balance but a static-shape accelerator buffer does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core import cfmm
+from repro.core.quantize import INT8_ACT_MAX, quantize_int7
+
+SERVE_MODES = ("dense", "int8", "cfmm", "sparse_cfmm", "bitserial")
+
+
+def _act_quant(x: jax.Array):
+    """Dynamic per-tensor INT8 activation quantization (the Collector
+    saturates/rounds activations to 8 bits, paper SS II-D.4)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = (jnp.maximum(amax, 1e-12) / INT8_ACT_MAX).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -INT8_ACT_MAX, INT8_ACT_MAX).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Bitmap packing (traceable; shapes static given keep_k)
+# ---------------------------------------------------------------------------
+
+def balanced_prune_codes(w: jax.Array, keep_k: int) -> jax.Array:
+    """Keep the top-``keep_k`` |w| entries per column; quantize to INT7."""
+    ranks = jnp.argsort(jnp.argsort(-jnp.abs(w), axis=0, stable=True),
+                        axis=0, stable=True)
+    pruned = jnp.where(ranks < keep_k, w, 0.0)
+    return quantize_int7(pruned, axis=-1)
+
+
+def bitmap_pack(codes: jax.Array, keep_k: int):
+    """int8 codes (K, N) with <= keep_k nonzeros/col -> (bitmap, values).
+
+    bitmap: (K/8, N) uint8, little-endian bit j of row r = mask[8r+j].
+    values: (keep_k, N) int8, nonzeros in ascending row order.
+    """
+    K, N = codes.shape
+    assert K % 8 == 0, f"K={K} must be divisible by 8"
+    mask = codes != 0
+    pos = jnp.cumsum(mask, axis=0) - 1                      # rank within col
+    pos = jnp.where(mask, pos, keep_k)                      # park drops
+    cols = jnp.broadcast_to(jnp.arange(N)[None, :], (K, N))
+    values = jnp.zeros((keep_k, N), jnp.int8)
+    values = values.at[pos, cols].set(codes, mode="drop")
+    bits = mask.reshape(K // 8, 8, N).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))[None, :, None]
+    bitmap = jnp.sum(bits * weights, axis=1).astype(jnp.uint8)
+    return bitmap, values
+
+
+def bitmap_unpack(bitmap: jax.Array, values: jax.Array) -> jax.Array:
+    """Inverse of bitmap_pack -> dense int8 codes (K, N).  This is the jnp
+    lowering of the in-VMEM expansion the Pallas sparse kernel performs."""
+    Kb, N = bitmap.shape
+    keep_k = values.shape[0]
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
+    mask = ((bitmap[:, None, :] >> shifts) & 1).reshape(Kb * 8, N).astype(bool)
+    pos = jnp.clip(jnp.cumsum(mask, axis=0) - 1, 0, keep_k - 1)
+    gathered = jnp.take_along_axis(values, pos, axis=0)
+    return jnp.where(mask, gathered, jnp.int8(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def dense_of(w, dtype=jnp.float32) -> jax.Array:
+    """Dequantize any weight-leaf form back to a dense array.
+
+    Used by paths that consume the weight *algebraically* rather than as a
+    plain matmul (e.g. MLA's absorbed decode pulls k_up through q).  Cheap:
+    the decode is elementwise and the consumers are small projections.
+    """
+    if isinstance(w, nn.Param):
+        w = w.value
+    if not isinstance(w, dict):
+        return w.astype(dtype)
+    if "bitmap" in w:
+        codes = bitmap_unpack(w["bitmap"], w["values"])
+        return codes.astype(dtype) * w["scale"].astype(dtype)
+    codes = w.get("codes", w.get("bs_codes", w.get("values")))
+    return codes.astype(dtype) * w["scale"].astype(dtype)
+
+
+def _flatten_batch(x: jax.Array):
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+def _int8_dot(x_q: jax.Array, w_int8: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        x_q, w_int8, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
+    """y = x @ W for any compiled or dense weight leaf.  Preserves x.dtype."""
+    if isinstance(w, nn.Param):
+        w = w.value
+    if not isinstance(w, dict):                    # dense (array / tracer)
+        wv = w
+        if qat:
+            from repro.core.quantize import fake_quant_int7
+            wv = fake_quant_int7(wv.astype(jnp.float32), axis=-1).astype(x.dtype)
+        return jnp.matmul(x, wv.astype(x.dtype))
+
+    x2, lead = _flatten_batch(x)
+    x_q, s_x = _act_quant(x2)
+    if "bitmap" in w:                              # sparse_cfmm
+        from repro.kernels import ops
+        acc = ops.sparse_cfmm_matmul(x_q, w["bitmap"], w["values"])
+    elif "bs_codes" in w:                          # bitserial ablation
+        acc = cfmm.bitserial_matmul(x_q, w["bs_codes"])
+    elif "codes" in w:                             # cfmm
+        from repro.kernels import ops
+        acc = ops.cfmm_matmul(x_q, w["codes"])
+    else:                                          # int8
+        acc = _int8_dot(x_q, w["values"])
+    y = acc.astype(jnp.float32) * (s_x * w["scale"].reshape(1, -1))
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Compilation (training tree -> constant-parameter serving tree)
+# ---------------------------------------------------------------------------
+
+def _compile_leaf(p: nn.Param, mode: str, sparsity: float):
+    w = p.value.astype(jnp.float32)
+    lead, in_ax, out_ax = p.axes[:-2], p.axes[-2], p.axes[-1]
+    fn = lambda wi: _compile_leaf_2d(wi, mode, sparsity)
+    for _ in range(w.ndim - 2):                    # stacked (layers/experts)
+        fn = jax.vmap(fn)
+    out = fn(w)
+    return {k: nn.Param(v, _leaf_axes(k, lead, in_ax, out_ax))
+            for k, v in out.items()}
+
+
+def _leaf_axes(kind: str, lead, in_ax, out_ax):
+    if kind == "scale":
+        return lead + (None, out_ax)
+    if kind == "bitmap":
+        return lead + (in_ax, out_ax)    # rows = in/8 (divisibility guarded)
+    if kind == "values":
+        return lead + (None, out_ax)
+    return lead + (in_ax, out_ax)        # codes / bs_codes
+
+
+def _compile_leaf_2d(w: jax.Array, mode: str, sparsity: float) -> dict:
+    K = w.shape[0]
+    if mode == "sparse_cfmm" and K % 8 == 0:
+        keep_k = max(8, int(round(K * (1.0 - sparsity))))
+        keep_k = min(K, ((keep_k + 7) // 8) * 8)
+        qt = balanced_prune_codes(w, keep_k)
+        bitmap, values = bitmap_pack(qt.values, keep_k)
+        return {"bitmap": bitmap, "values": values,
+                "scale": qt.scale.reshape(1, -1)}
+    qt = quantize_int7(w, axis=-1)
+    key = {"int8": "values", "sparse_cfmm": "values",
+           "bitserial": "bs_codes"}.get(mode, "codes")
+    return {key: qt.values, "scale": qt.scale.reshape(1, -1)}
+
+
+def compile_params(params, mode: str = "sparse_cfmm", sparsity: float = 0.8):
+    """Convert a trained param tree to its Compiled-NN serving form.
+
+    Only kind='linear' leaves are packed; norms, embeddings, biases and
+    routers stay in their training dtype.  Traceable — safe under
+    jax.eval_shape for the dry run.
+    """
+    assert mode in SERVE_MODES, mode
+    if mode == "dense":
+        return params
+
+    def visit(p):
+        if isinstance(p, nn.Param) and p.kind == "linear" and p.value.ndim >= 2:
+            return _compile_leaf(p, mode, sparsity)
+        return p
+
+    return jax.tree.map(visit, params, is_leaf=lambda x: isinstance(x, nn.Param))

@@ -1,0 +1,121 @@
+"""INT7 per-output-channel symmetric quantization (paper SS II-A).
+
+The paper starts from a model quantized with a modified Ternary Residual
+Networks scheme: one scaling factor per output channel and six ternary
+residual terms, which is range-equivalent to INT7 (|q| <= 63 = 2^6 - 1),
+reported at 0.22% top-1 loss vs FP32.  We implement the equivalent direct
+INT7 quantizer (values live in int8 storage), the ternary-residual
+decomposition check, activation INT8 quantization (activations are
+"saturated and rounded to 8 bits" in the Collector, SS II-D.4), and a
+straight-through fake-quant for QAT so models trained here can be compiled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT7_MAX = 63          # 2**6 - 1: six ternary residual terms
+INT8_ACT_MAX = 127     # activations saturate/round to 8 bits
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """Quantized tensor: int values + float scale broadcastable over values.
+
+    ``values`` are int8 storage holding INT7 (weights) or INT8 (activations)
+    codes; ``scale`` has one entry per output channel for weights (paper:
+    "each output channel has one independent scaling factor").
+    """
+
+    values: jax.Array   # int8
+    scale: jax.Array    # f32, broadcastable against values
+    axis: int = -1      # channel axis the scale runs over
+
+    def tree_flatten(self):
+        return (self.values, self.scale), self.axis
+
+    @classmethod
+    def tree_unflatten(cls, axis, children):
+        return cls(children[0], children[1], axis)
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self, dtype=jnp.float32):
+        return self.values.astype(dtype) * self.scale.astype(dtype)
+
+
+def _channel_scale(w: jax.Array, axis: int, qmax: int) -> jax.Array:
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    return jnp.maximum(amax, 1e-12) / qmax
+
+
+def quantize_int7(w: jax.Array, axis: int = -1) -> QTensor:
+    """Symmetric per-output-channel INT7 weight quantization."""
+    scale = _channel_scale(w, axis, INT7_MAX)
+    q = jnp.clip(jnp.round(w / scale), -INT7_MAX, INT7_MAX).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32), axis)
+
+
+def quantize_act_int8(x: jax.Array, scale: Optional[jax.Array] = None) -> QTensor:
+    """INT8 activation quantization (per-tensor; dynamic if no scale given)."""
+    if scale is None:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.maximum(amax, 1e-12) / INT8_ACT_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_ACT_MAX, INT8_ACT_MAX).astype(jnp.int8)
+    return QTensor(q, jnp.asarray(scale, jnp.float32), -1)
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant_int7(w: jax.Array, axis: int = -1) -> jax.Array:
+    """QAT fake-quant: INT7 forward numerics, straight-through gradient."""
+    scale = _channel_scale(w, axis, INT7_MAX)
+    q = jnp.clip(_ste_round(w / scale), -INT7_MAX, INT7_MAX)
+    return q * scale
+
+
+def ternary_residual_decompose(q: jax.Array, terms: int = 6):
+    """Decompose INT7 codes into ``terms`` ternary power-of-two residuals.
+
+    Returns t with shape q.shape + (terms,) and t_i in {-1, 0, +1} such that
+    sum_i t_i * 2^i == q exactly.  This is the TRN form the paper's source
+    model used ("6 residual terms (equivalent to INT7)").
+    """
+    sign = jnp.sign(q).astype(jnp.int32)
+    mag = jnp.abs(q).astype(jnp.int32)
+    bits = [(mag >> i) & 1 for i in range(terms)]
+    return jnp.stack([b * sign for b in bits], axis=-1).astype(jnp.int8)
+
+
+def ternary_residual_reconstruct(t: jax.Array) -> jax.Array:
+    terms = t.shape[-1]
+    weights = jnp.asarray([1 << i for i in range(terms)], jnp.int32)
+    return jnp.sum(t.astype(jnp.int32) * weights, axis=-1)
+
+
+def quantization_error(w: jax.Array, axis: int = -1) -> jax.Array:
+    """Relative L2 error of INT7 round-trip (paper: 0.22% accuracy loss)."""
+    qt = quantize_int7(w, axis)
+    err = jnp.linalg.norm(w - qt.dequantize()) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+    return err

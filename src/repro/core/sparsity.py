@@ -1,0 +1,162 @@
+"""Parameter sparsity utilities (paper SS II-A).
+
+The paper uses an 80% unstructured-sparse ResNet50 (Movidius hybrid-pruned,
+AMC-style) and exploits it at zero overhead because zero weights synthesize
+to nothing.  On TPU, element sparsity in a dense MXU is worthless, so we
+convert constant sparsity into forms the hardware can use:
+
+* magnitude pruning to a target sparsity (the model-side substrate);
+* bitmap-packed storage (values of nonzeros + 1 bit/elem mask) -> the
+  memory-side win for weight-bandwidth-bound decode;
+* column clustering -> block-level sparsity a tiled kernel can skip at
+  trace time (weights are constants, so the block mask is compile-time).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def magnitude_prune(w: jax.Array, sparsity: float) -> jax.Array:
+    """Zero the smallest-|w| fraction globally (unstructured)."""
+    if sparsity <= 0.0:
+        return w
+    flat = jnp.abs(w).reshape(-1)
+    k = int(round(flat.size * sparsity))
+    if k <= 0:
+        return w
+    thresh = jnp.sort(flat)[k - 1]
+    return jnp.where(jnp.abs(w) > thresh, w, 0.0)
+
+
+def sparsity_stats(q: jax.Array) -> dict:
+    nz = np.asarray(jnp.sum(q != 0))
+    total = int(np.prod(q.shape))
+    return {"total": total, "nonzero": int(nz),
+            "sparsity": 1.0 - int(nz) / max(total, 1)}
+
+
+@dataclasses.dataclass
+class BitmapPacked:
+    """Bitmap-compressed constant weights (decode-bandwidth format).
+
+    ``bitmap`` packs one validity bit per element (uint8, K/8 per column
+    group); ``values`` holds int8 codes of nonzeros, padded to a fixed
+    budget so shapes are static.  Storage for s-sparse INT7:
+    (1-s)*8 + 1 bits/param  (~2.6 bits at 80% vs 16 for bf16 -> ~6.2x).
+    """
+
+    bitmap: np.ndarray        # (K // 8, N) uint8
+    values: np.ndarray        # (budget, N) int8, column-major packed nonzeros
+    nnz_per_col: np.ndarray   # (N,) int32
+    shape: tuple[int, int]
+
+    @property
+    def packed_bytes(self) -> int:
+        return self.bitmap.size + self.values.size + 4 * self.nnz_per_col.size
+
+    @property
+    def dense_bf16_bytes(self) -> int:
+        return 2 * int(np.prod(self.shape))
+
+
+def bitmap_pack(q_codes: np.ndarray, budget_slack: float = 1.0) -> BitmapPacked:
+    """Pack int8 codes (K, N) column-wise.  budget = max col nnz * slack."""
+    q = np.asarray(q_codes)
+    K, N = q.shape
+    assert K % 8 == 0, "K must be a multiple of 8 for bitmap packing"
+    mask = (q != 0)
+    nnz_per_col = mask.sum(axis=0).astype(np.int32)
+    budget = int(np.ceil(nnz_per_col.max() * budget_slack)) if N else 0
+    bits = mask.astype(np.uint8).reshape(K // 8, 8, N)
+    weights = (1 << np.arange(8, dtype=np.uint8)).reshape(1, 8, 1)
+    bitmap = (bits * weights).sum(axis=1).astype(np.uint8)
+    values = np.zeros((budget, N), np.int8)
+    for n in range(N):
+        col = q[mask[:, n], n]
+        values[: col.size, n] = col
+    return BitmapPacked(bitmap, values, nnz_per_col, (K, N))
+
+
+def bitmap_unpack(p: BitmapPacked) -> np.ndarray:
+    K, N = p.shape
+    bits = np.unpackbits(p.bitmap[:, None, :], axis=1, bitorder="little")
+    mask = bits.reshape(K, N).astype(bool)
+    q = np.zeros((K, N), np.int8)
+    for n in range(N):
+        q[mask[:, n], n] = p.values[: p.nnz_per_col[n], n]
+    return q
+
+
+def block_mask(q_codes: jax.Array, block: tuple[int, int]) -> np.ndarray:
+    """(K/bk, N/bn) bool mask: True where a weight block has any nonzero.
+
+    Weights are constants, so this mask is compile-time metadata — a tiled
+    matmul specialises its grid to it (the paper's "MACs associated with
+    constant zeros are simply dropped", at block granularity).
+    """
+    q = np.asarray(q_codes)
+    K, N = q.shape
+    bk, bn = block
+    assert K % bk == 0 and N % bn == 0, (q.shape, block)
+    blocks = q.reshape(K // bk, bk, N // bn, bn)
+    return (blocks != 0).any(axis=(1, 3))
+
+
+def block_sparsity(q_codes: jax.Array, block: tuple[int, int]) -> float:
+    m = block_mask(q_codes, block)
+    return 1.0 - float(m.mean())
+
+
+def cluster_rows(q_codes: np.ndarray, block_k: int, iters: int = 8) -> np.ndarray:
+    """Greedy row permutation concentrating nonzeros into row blocks.
+
+    Orders rows by column-support similarity so that rows sharing support
+    land in the same block of ``block_k`` — raising block sparsity that a
+    trace-time-specialised kernel can skip.  Returns the permutation.
+    """
+    q = np.asarray(q_codes)
+    K = q.shape[0]
+    support = (q != 0)
+    # Sort rows by (nnz, first-nonzero-column) then refine by nearest-
+    # neighbour chaining on Jaccard similarity of supports.
+    order = np.lexsort((support.argmax(axis=1), support.sum(axis=1)))
+    sup = support[order]
+    perm = list(range(K))
+    for _ in range(iters):
+        improved = False
+        for i in range(0, K - block_k, block_k):
+            a = sup[perm[i: i + block_k]].any(axis=0)
+            j_block = i + block_k
+            b = sup[perm[j_block: j_block + block_k]].any(axis=0)
+            base = a.sum() + b.sum()
+            # try swapping boundary rows to shrink combined support
+            ii, jj = i + block_k - 1, j_block
+            if jj < len(perm):
+                perm[ii], perm[jj] = perm[jj], perm[ii]
+                a2 = sup[perm[i: i + block_k]].any(axis=0)
+                b2 = sup[perm[j_block: j_block + block_k]].any(axis=0)
+                if a2.sum() + b2.sum() < base:
+                    improved = True
+                else:
+                    perm[ii], perm[jj] = perm[jj], perm[ii]
+        if not improved:
+            break
+    return order[np.asarray(perm)]
+
+
+def effective_ops(q_codes: jax.Array, macs_dense: int) -> dict:
+    """Paper's "effective TOPs" accounting: ops are counted dense (sparsity
+    is a benefit, so effective ops = dense MACs * 2) while the hardware only
+    executes the nonzero fraction."""
+    stats = sparsity_stats(q_codes)
+    executed = macs_dense * (1.0 - stats["sparsity"])
+    return {
+        "effective_ops": 2 * macs_dense,
+        "executed_macs": executed,
+        "speedup_vs_dense": macs_dense / max(executed, 1.0),
+        **stats,
+    }

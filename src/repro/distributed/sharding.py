@@ -1,0 +1,212 @@
+"""Logical-axis sharding: rules tables, PartitionSpec construction with
+divisibility guards, and in-graph sharding constraints.
+
+Logical axes used across the codebase:
+  batch/seq            activations
+  embed/vocab/ffn_*    weight matrices (in x out)
+  heads_q/heads_kv     attention projections (out dim = heads*head_dim)
+  experts_stack        MoE expert-stacked leading dim
+  layers               scan-stacked leading dim (never sharded)
+  *_s                  state/cache axes (heads_kv_sharded etc.)
+
+The rules map logical -> mesh axes.  A guard drops any assignment whose
+dimension is not divisible by the mesh-axis size (e.g. smollm's 15 heads
+on a 16-way model axis) — the dry run then shows the replication cost in
+the roofline instead of failing to lower.
+"""
+from __future__ import annotations
+
+import logging
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import nn
+
+log = logging.getLogger(__name__)
+
+# Training: FSDP over 'data' on the weight in-dim, TP over 'model' on the
+# out-dim (Megatron column-parallel; down/o projections are row-parallel
+# via their own in-axis entry).  'pod' stays pure-DP.
+TRAIN_RULES = {
+    "batch": ("data",),
+    "seq": (),
+    "embed": ("data",),          # FSDP shard of the d_model dim
+    "embed_out": ("model",),
+    "vocab": ("model",),
+    "ffn_in": ("model",),        # column-parallel out-dim (gate/up)
+    "ffn_out": ("model",),       # row-parallel in-dim (down proj)
+    "heads_q": ("model",),
+    "heads_kv": ("model",),
+    "kv_lora": (),
+    "mamba_inner": ("model",),
+    "experts": ("model",),       # router out-dim
+    "experts_stack": ("model",), # expert parallelism
+    "conv_in": (),
+    "conv_out": ("model",),
+    "classes": ("model",),
+    "heads_s": ("model",),
+    "heads_kv_sharded": ("model",),
+    "mamba_inner_s": ("model",),
+    "embed_s": (),
+    "layers": (),
+}
+
+# Serving: weights replicated across 'data' (each DP replica serves its own
+# requests), TP over 'model'; caches shard batch over 'data'.
+SERVE_RULES = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "embed": (),
+    "ffn_out": (),
+    "kv_seq": (),
+})
+
+# Perf variant (SSPerf it-1): small dense models on a fixed 16x16 mesh are
+# strangled by TP activation all-reduces; fold 'model' into data parallel —
+# batch shards over both axes, weights FSDP over both, no activation ARs.
+DP_ONLY_TRAIN_RULES = dict(TRAIN_RULES)
+DP_ONLY_TRAIN_RULES.update({
+    "batch": (("data", "model"), "data"),
+    "embed": (("data", "model"), "data"),
+    "ffn_in": (),
+    "ffn_out": (),
+    "heads_q": (),
+    "heads_kv": (),
+    "mamba_inner": (),
+    "experts_stack": ("model",),   # expert parallelism stays
+    "vocab": (),
+    "embed_out": (),
+    "conv_out": (),
+})
+
+# Perf variant (SSPerf it-3): split-KV decode ("FlashDecoding on SPMD") —
+# the KV cache seq dim shards over 'model'; XLA's partitioned softmax
+# reductions emit small per-layer all-reduces instead of replicating the
+# cache 16x.  Weight TP unchanged.
+SERVE_SPLITKV_RULES = dict(SERVE_RULES)
+SERVE_SPLITKV_RULES.update({
+    "kv_seq": ("model",),
+    "heads_kv_sharded": (),
+})
+
+# Perf variant (SSPerf jamba it-2): expert parallelism + pure DP — batch on
+# 'data' only, experts sharded over 'model', NO tensor parallelism on the
+# non-expert (mamba/attention/dense) linears.  Kills the per-layer TP
+# activation all-reduces that dominate hybrid-MoE training; the only
+# cross-'model' traffic left is the MoE dispatch/combine all-to-all.
+EP_DP_TRAIN_RULES = dict(DP_ONLY_TRAIN_RULES)
+EP_DP_TRAIN_RULES.update({
+    "batch": ("data",),
+    "embed": ("data",),
+})
+
+RULES_BY_NAME = {
+    "train": TRAIN_RULES,
+    "dp_only": DP_ONLY_TRAIN_RULES,
+    "ep_dp": EP_DP_TRAIN_RULES,
+    "serve": SERVE_RULES,
+    "serve_splitkv": SERVE_SPLITKV_RULES,
+}
+
+
+def _axis_size(mesh: Mesh, mesh_ax) -> int:
+    if isinstance(mesh_ax, tuple):
+        size = 1
+        for a in mesh_ax:
+            size *= mesh.shape.get(a, 1)
+        return size
+    return mesh.shape.get(mesh_ax, 1)
+
+
+def spec_for(axes: tuple, shape: tuple, rules: dict, mesh: Mesh) -> P:
+    """Build a PartitionSpec, dropping non-divisible assignments and
+    never using one mesh axis twice in a single spec.  Rule entries may be
+    tuples of mesh axes (sharded over their product)."""
+    entries = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        assigned = None
+        if ax is not None:
+            for mesh_ax in rules.get(ax, ()):
+                parts = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+                size = _axis_size(mesh, mesh_ax)
+                if (size > 1 and not (used & set(parts))
+                        and dim % size == 0):
+                    assigned = mesh_ax
+                    used.update(parts)
+                    break
+                elif size > 1:
+                    log.debug("drop shard %s(%d) %% %s(%d)",
+                              ax, dim, size, size)
+        entries.append(assigned)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(params, mesh: Mesh, rules: dict = TRAIN_RULES):
+    """Param tree (boxed or shape-structs in Params) -> NamedSharding tree."""
+    def visit(p: nn.Param):
+        return NamedSharding(mesh, spec_for(p.axes, p.value.shape, rules, mesh))
+    return jax.tree.map(visit, params, is_leaf=lambda x: isinstance(x, nn.Param))
+
+
+def shard(x, *axes):
+    """In-graph sharding constraint by logical axes; no-op without a mesh."""
+    mesh = get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    rules = _ACTIVE_RULES[0]
+    spec = spec_for(tuple(axes), x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def get_abstract_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+_ACTIVE_RULES = [TRAIN_RULES]
+
+
+class use_rules:
+    def __init__(self, rules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.insert(0, self.rules)
+
+    def __exit__(self, *a):
+        _ACTIVE_RULES.pop(0)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh,
+                    dp_axes=("pod", "data")) -> dict:
+    """ShapeDtypeStruct batch dict -> NamedSharding dict (batch over the
+    data-parallel axes; everything else replicated)."""
+    dp = [ax for ax in dp_axes if mesh.shape.get(ax, 1) > 1]
+
+    def visit(s):
+        shape = s.shape
+        # find the batch dim: first dim unless M-RoPE positions (3, B, ...)
+        bdim = 0 if len(shape) < 2 or shape[0] != 3 else 1
+        total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        entries = [None] * len(shape)
+        if total > 1 and shape[bdim] % total == 0:
+            entries[bdim] = tuple(dp) if len(dp) > 1 else dp[0]
+        elif mesh.shape.get("data", 1) > 1 and shape[bdim] % mesh.shape["data"] == 0:
+            entries[bdim] = "data"
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(visit, batch_specs)

@@ -1,0 +1,98 @@
+"""Block-sparse constant-weight matmul — Pallas TPU kernel.
+
+"MACs associated with constant zeros are simply dropped" (paper SS II-A) at
+the granularity a systolic array can drop them: whole (bk x bn) weight
+blocks.  Because parameters are constants, the block mask is compile-time
+metadata — the grid enumerates only the *active* blocks (zero blocks never
+leave HBM, never touch the MXU), with the block coordinate list delivered
+via scalar prefetch so BlockSpec index_maps can follow it.
+
+Used for clustered sparse weights (core.sparsity.cluster_rows raises block
+sparsity of 80%-unstructured weights) and for MoE expert block-diagonals.
+Active blocks are ordered column-major (all k-blocks of output tile j
+adjacent) so each output tile is initialized exactly once and revisited
+contiguously.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(meta_ref, x_ref, wb_ref, out_ref, acc_ref):
+    # meta rows: [k_block, n_block, is_first_for_n, is_last_for_n]
+    i = pl.program_id(1)
+    first = meta_ref[2, i]
+    last = meta_ref[3, i]
+
+    @pl.when(first == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], wb_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last == 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def plan_blocks(mask: np.ndarray) -> np.ndarray:
+    """mask (Kb, Nb) bool -> meta (4, n_active) int32, column-major order."""
+    ks, ns, firsts, lasts = [], [], [], []
+    for nb in range(mask.shape[1]):
+        active = np.nonzero(mask[:, nb])[0]
+        for pos, kb in enumerate(active):
+            ks.append(kb)
+            ns.append(nb)
+            firsts.append(1 if pos == 0 else 0)
+            lasts.append(1 if pos == len(active) - 1 else 0)
+    if not ks:  # degenerate: fully sparse
+        return np.zeros((4, 0), np.int32)
+    return np.stack([ks, ns, firsts, lasts]).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kn", "n_blocks_n",
+                                             "interpret"))
+def block_sparse_matmul_pallas(x: jax.Array, w_blocks: jax.Array,
+                               meta: jax.Array, block_kn: tuple,
+                               n_blocks_n: int,
+                               interpret: bool = False) -> jax.Array:
+    """x (M, K) @ active blocks (n_active, bk, bn) -> (M, N).
+
+    meta: (4, n_active) int32 from plan_blocks (device array; constant).
+    Columns of the output whose block column has no active blocks are
+    required to be absent from meta only if N tiles without work are
+    zero-filled by the caller — kernels.ops handles that case.
+    """
+    M, K = x.shape
+    bk, bn = block_kn
+    n_active = w_blocks.shape[0]
+    assert w_blocks.shape[1:] == (bk, bn) and meta.shape == (4, n_active)
+    N = n_blocks_n * bn
+    bm = min(128, M)
+    assert M % bm == 0, (M, bm)
+    grid = (M // bm, n_active)
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda m, i, meta: (m, meta[0, i])),
+                pl.BlockSpec((1, bk, bn), lambda m, i, meta: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda m, i, meta: (m, meta[1, i])),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(meta, x, w_blocks)
+    return out

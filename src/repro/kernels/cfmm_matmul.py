@@ -1,0 +1,71 @@
+"""CFMM quantized matmul — Pallas TPU kernel.
+
+TPU-native realization of the paper's CFMM dataflow (DESIGN.md SS2): the
+packed constant INT7 codes stream HBM->VMEM tile by tile, are "decoded"
+in VMEM (for int8 codes the decode is the identity — the 32-odd-product
+structure lives in the packing; see sparse_matvec for the bitmap format),
+and hit the MXU as int8 x int8 -> int32 with the per-output-channel
+dequant scale fused into the epilogue (the paper's Collector, SS II-D.4).
+
+Grid: (M/bm, N/bn, K/bk), K innermost, int32 accumulator in VMEM scratch.
+Default blocks are MXU-aligned (128, 128) with bk=512, keeping the working
+set (bm*bk + bk*bn + 4*bm*bn + 4*bn) well under VMEM (~0.2 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, sw_ref, out_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # VMEM decode of the packed constant parameters is the identity for
+    # int8 codes; the MXU consumes them directly at 2x bf16 peak.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        # fused Collector epilogue: per-output-channel dequant scale
+        out_ref[...] = (acc_ref[...].astype(jnp.float32)
+                        * sw_ref[...]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def cfmm_matmul_pallas(x_q: jax.Array, codes: jax.Array, scale: jax.Array,
+                       bm: int = 128, bn: int = 128, bk: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """x_q (M, K) int8 @ codes (K, N) int8 -> f32 (M, N), w-scale fused.
+
+    scale: (1, N) f32 per-output-channel weight scale.  The caller
+    (kernels.ops) pads M/N/K to block multiples and applies the scalar
+    activation scale.
+    """
+    M, K = x_q.shape
+    K2, N = codes.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        (M, K, N), (bm, bn, bk))
+    n_k = K // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, codes, scale)
+    return out

@@ -1,0 +1,120 @@
+"""Flash attention — Pallas TPU kernel (prefill/train hot spot).
+
+GQA-native streaming-softmax attention with the same schedule as the pure
+JAX lowering in models/attention.py: grid over (batch*kv_head, q blocks,
+kv blocks), kv innermost; running (m, l, o) state in VMEM scratch; causal
+and sliding-window masking by absolute positions; query groups share one
+K/V tile (no materialized repeat).
+
+Block shapes default to (128 q x 128 kv) tiles at D <= 256: working set
+q (G*bq*D) + k/v (bk*D*2) + o (G*bq*Dv) + p (G*bq*bk) ~ 0.6 MB in VMEM.
+Causal pruning: kv blocks strictly above the diagonal are skipped by an
+in-kernel predicate (the dominant-term win vs dense scores at long S).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, n_kv: int, causal: bool, window,
+            q_offset: int, scale: float):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos0 = q_i * bq + q_offset
+    kpos0 = kv_i * bk
+    # causal block pruning: skip blocks entirely above the diagonal or
+    # entirely left of the sliding window
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, kpos0 <= qpos0 + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, kpos0 + bk - 1 > qpos0 - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]                       # (G, bq, D)
+        k = k_ref[0]                       # (bk, D)
+        v = v_ref[0]                       # (bk, Dv)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bq, bk)
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None], p, 0.0)
+        alpha = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bq, Dv)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _done():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)[..., None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, window=None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, KVH, G, Tq, D); k: (B, KVH, Tk, D); v: (B, KVH, Tk, Dv).
+
+    Tq % bq == 0 and Tk % bk == 0 (kernels.ops pads); queries sit at the
+    end of the KV sequence (offset = Tk - Tq).
+    """
+    B, KVH, G, Tq, D = q.shape
+    Tk, Dv = k.shape[2], v.shape[-1]
+    assert Tq % bq == 0 and Tk % bk == 0, ((Tq, Tk), (bq, bk))
+    n_q, n_kv = Tq // bq, Tk // bk
+    scale = 1.0 / (D ** 0.5)
+    qr = q.reshape(B * KVH, G, Tq, D)
+    kr = k.reshape(B * KVH, Tk, D)
+    vr = v.reshape(B * KVH, Tk, Dv)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal,
+                             window=window, q_offset=Tk - Tq, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * KVH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, Dv), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KVH, G, Tq, Dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KVH, G, Tq, Dv)

@@ -1,0 +1,149 @@
+"""Backend dispatch for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; everywhere else (this CPU
+container, and the multi-pod dry-run) the mathematically identical jnp
+references lower instead — same dtypes, same sharding, so compiled HLO
+stays representative.  Set REPRO_PALLAS=interpret to force the kernels
+through Pallas interpret mode (used by the kernel test-suite).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "jnp", "tpu"):
+        return env
+    return "tpu" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def cfmm_matmul(x_q: jax.Array, codes: jax.Array,
+                scale: jax.Array | None = None) -> jax.Array:
+    """int8 (M,K) @ int8 (K,N) -> int32 (or f32 with scale fused)."""
+    mode = _mode()
+    if mode == "jnp":
+        if scale is None:
+            return ref.int8_matmul_ref(x_q, codes)
+        return ref.cfmm_matmul_ref(x_q, codes, scale)
+    from repro.kernels.cfmm_matmul import cfmm_matmul_pallas
+    interpret = mode == "interpret"
+    M, K = x_q.shape
+    N = codes.shape[1]
+    bm = 128 if M >= 128 else max(8, 1 << (M - 1).bit_length())
+    bk = min(512, K) if K % 512 == 0 else _largest_tile(K, 512)
+    bn = 128 if N % 128 == 0 else _largest_tile(N, 128)
+    xp, _ = _pad_to(x_q, 0, bm)
+    s = scale if scale is not None else jnp.ones((1, N), jnp.float32)
+    out = cfmm_matmul_pallas(xp, codes, s, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)[:M]
+    if scale is None:
+        return out.astype(jnp.int32)
+    return out
+
+
+def _largest_tile(dim: int, cap: int) -> int:
+    for t in range(min(cap, dim), 0, -1):
+        if dim % t == 0:
+            return t
+    return 1
+
+
+def sparse_cfmm_matmul(x_q: jax.Array, bitmap: jax.Array,
+                       values: jax.Array,
+                       scale: jax.Array | None = None) -> jax.Array:
+    """Bitmap-packed sparse matmul; int32 out (or f32 with scale fused)."""
+    mode = _mode()
+    if mode == "jnp":
+        acc = ref.sparse_matvec_ref(x_q, bitmap, values)
+        if scale is None:
+            return acc
+        return acc.astype(jnp.float32) * scale
+    from repro.kernels.sparse_matvec import sparse_matvec_pallas
+    interpret = mode == "interpret"
+    M, K = x_q.shape
+    N = bitmap.shape[1]
+    bn = 128 if N % 128 == 0 else _largest_tile(N, 128)
+    k_chunk = _largest_tile(K, 1024)
+    if k_chunk % 8 != 0:
+        k_chunk = K  # single chunk fallback
+    s = scale if scale is not None else jnp.ones((1, N), jnp.float32)
+    out = sparse_matvec_pallas(x_q, bitmap, values, s, bn=bn,
+                               k_chunk=k_chunk, interpret=interpret)
+    if scale is None:
+        return out.astype(jnp.int32)
+    return out
+
+
+def block_sparse_matmul(x: jax.Array, w: jax.Array,
+                        block_kn: tuple = (128, 128)) -> jax.Array:
+    """x (M,K) @ w (K,N) skipping all-zero constant blocks.
+
+    w must be a *concrete* array (constant parameters) — the block mask and
+    active-block plan are built at trace time, so zero blocks are dropped
+    from the grid entirely (the paper's dropped MACs).
+    """
+    from repro.core.sparsity import block_mask
+    from repro.kernels.block_sparse import (block_sparse_matmul_pallas,
+                                            plan_blocks)
+    assert not isinstance(w, jax.core.Tracer), (
+        "block_sparse_matmul requires constant weights")
+    bk, bn = block_kn
+    K, N = w.shape
+    assert K % bk == 0 and N % bn == 0, ((K, N), block_kn)
+    mask = block_mask(w, (bk, bn))
+    wnp = np.asarray(w)
+    blocks = []
+    for nb in range(mask.shape[1]):
+        for kb in np.nonzero(mask[:, nb])[0]:
+            blocks.append(wnp[kb * bk:(kb + 1) * bk, nb * bn:(nb + 1) * bn])
+    meta = plan_blocks(mask)
+    mode = _mode()
+    if mode == "jnp" or meta.shape[1] == 0:
+        w_dense = jnp.asarray(np.where(
+            np.kron(mask, np.ones((bk, bn), bool)), wnp, 0))
+        return (x @ w_dense.astype(x.dtype))
+    w_blocks = jnp.asarray(np.stack(blocks))
+    M = x.shape[0]
+    bm = min(128, M)
+    xp, _ = _pad_to(x, 0, bm)
+    out = block_sparse_matmul_pallas(
+        xp, w_blocks.astype(x.dtype), jnp.asarray(meta), (bk, bn),
+        N // bn, interpret=(mode == "interpret"))[:M]
+    col_has_work = np.repeat(mask.any(axis=0), bn)
+    return jnp.where(jnp.asarray(col_has_work)[None, :], out, 0)
+
+
+def flash_attention(q, k, v, causal=True, window=None):
+    """GQA-native flash attention: Pallas on TPU, jnp chunked elsewhere.
+
+    q: (B, KVH, G, Tq, D); k: (B, KVH, Tk, D); v: (B, KVH, Tk, Dv).
+    """
+    mode = _mode()
+    if mode == "jnp":
+        from repro.models.attention import flash_attention as jnp_flash
+        return jnp_flash(q, k, v, causal=causal, window=window)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    B, KVH, G, Tq, D = q.shape
+    Tk = k.shape[2]
+    bq = _largest_tile(Tq, 128)
+    bk = _largest_tile(Tk, 128)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk,
+                                  interpret=(mode == "interpret"))

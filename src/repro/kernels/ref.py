@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (and the non-TPU lowering).
+
+These are the mathematically exact references the kernels must match
+bit-for-bit (integer paths) or to fp tolerance (scaled outputs).  They are
+also what the multi-pod dry-run lowers on the CPU backend — same sharding,
+same dtypes, so the compiled HLO is representative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q: jax.Array, codes: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 (exact)."""
+    return jax.lax.dot_general(
+        x_q, codes, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def cfmm_matmul_ref(x_q: jax.Array, codes: jax.Array,
+                    scale: jax.Array) -> jax.Array:
+    return int8_matmul_ref(x_q, codes).astype(jnp.float32) * scale
+
+
+def bitmap_expand_ref(bitmap: jax.Array, values: jax.Array) -> jax.Array:
+    """(K/8, N) uint8 bitmap + (keep_k, N) int8 -> dense int8 codes (K, N)."""
+    from repro.core.compiled_linear import bitmap_unpack
+    return bitmap_unpack(bitmap, values)
+
+
+def sparse_matvec_ref(x_q: jax.Array, bitmap: jax.Array,
+                      values: jax.Array) -> jax.Array:
+    """x_q (M, K) int8 @ bitmap-packed codes -> int32 (M, N) (exact)."""
+    return int8_matmul_ref(x_q, bitmap_expand_ref(bitmap, values))
+
+
+def block_sparse_matmul_ref(x: jax.Array, w_blocks: jax.Array,
+                            block_kn, mask) -> jax.Array:
+    """x (M, K) @ block-sparse W -> (M, N).
+
+    w_blocks: (n_active, bk, bn) dense storage of active blocks;
+    mask: (K//bk, N//bn) bool numpy, row-major ordering of active blocks.
+    """
+    import numpy as np
+    bk, bn = block_kn
+    Kb, Nb = mask.shape
+    K, N = Kb * bk, Nb * bn
+    w = jnp.zeros((K, N), w_blocks.dtype)
+    idx = 0
+    for kb in range(Kb):
+        for nb in range(Nb):
+            if mask[kb, nb]:
+                w = w.at[kb * bk:(kb + 1) * bk, nb * bn:(nb + 1) * bn].set(
+                    w_blocks[idx])
+                idx += 1
+    assert idx == w_blocks.shape[0]
+    if x.dtype == jnp.int8:
+        return int8_matmul_ref(x, w)
+    return x @ w
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None):
+    """Naive softmax attention oracle for the chunked/flash paths.
+
+    q,k,v: (B, H, T, D) (k/v may have fewer heads: GQA handled by caller).
+    """
+    T, S = q.shape[-2], k.shape[-2]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(q.shape[-1])
+    pos_q = jnp.arange(T)[:, None] + (S - T)
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)

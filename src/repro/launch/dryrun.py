@@ -1,0 +1,222 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. materializes parameter/optimizer/cache shapes via jax.eval_shape
+     (no allocation — ShapeDtypeStructs only);
+  3. jit-lowers train_step (train shapes) or serve/prefill_step (inference
+     shapes) with NamedShardings from the logical-axis rules;
+  4. .compile()s, records memory_analysis / cost_analysis / parsed
+     collectives into experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm_360m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --jobs 4
+"""
+import argparse
+import functools
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             serve_mode: str = "cfmm", variant: str = "baseline",
+             extra: dict | None = None, rules_name: str | None = None,
+             kv_dtype: str | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro import nn
+    from repro.configs.base import (SHAPES, cell_applicable, get_config,
+                                    input_specs)
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import lm
+    from repro.roofline import analysis
+    from repro.training import optimizer, train_step as ts
+
+    cfg = get_config(arch)
+    if extra:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **extra)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(functools.partial(lm.init, cfg=cfg), key)
+    n_params = analysis.count_params_from_shapes(params_shapes)
+    n_active = analysis.active_param_count(cfg, n_params)
+    batch_specs = input_specs(cfg, shape_name)
+    step = shape["step"]
+
+    with mesh:
+        if step == "train":
+            rules = shd.RULES_BY_NAME[rules_name or "train"]
+            p_shard = shd.param_shardings(params_shapes, mesh, rules)
+            opt_shapes = jax.eval_shape(optimizer.init,
+                                        nn.unbox(params_shapes))
+            o_shard = optimizer.OptState(
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                p_shard, p_shard)
+            dp_axes = (("pod", "data", "model")
+                       if rules_name == "dp_only" else ("pod", "data"))
+            b_shard = shd.batch_shardings(batch_specs, mesh, dp_axes)
+            fn = ts.make_train_step(cfg)
+            with shd.use_rules(rules):
+                lowered = jax.jit(
+                    fn, in_shardings=(p_shard, o_shard, b_shard),
+                    donate_argnums=(0, 1),
+                ).lower(nn.unbox(params_shapes), opt_shapes, batch_specs)
+        else:
+            rules = shd.RULES_BY_NAME[rules_name or "serve"]
+            from repro.core.compiled_linear import compile_params
+            serve_shapes = jax.eval_shape(
+                functools.partial(compile_params, mode=serve_mode),
+                params_shapes)
+            p_shard = shd.param_shardings(serve_shapes, mesh, rules)
+            S_max = shape["seq"]
+            B = shape["batch"]
+            cache_shapes = jax.eval_shape(
+                functools.partial(lm.cache_init, cfg, B, S_max,
+                                  S_enc=(1500 if cfg.encoder_decoder and
+                                         step == "decode" else
+                                         (shape["seq"] if cfg.encoder_decoder
+                                          else None)),
+                                  kv_dtype=(jnp.int8 if kv_dtype == "int8"
+                                            else None)))
+            c_shard = shd.param_shardings(cache_shapes, mesh, rules)
+            b_shard = shd.batch_shardings(batch_specs, mesh)
+            fn = ts.make_serve_step(cfg, kind=step)
+            with shd.use_rules(rules):
+                lowered = jax.jit(
+                    fn, in_shardings=(p_shard, c_shard, b_shard),
+                    donate_argnums=(1,),
+                ).lower(nn.unbox(serve_shapes), nn.unbox(cache_shapes),
+                        batch_specs)
+        compiled = lowered.compile()
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    mflops = analysis.model_flops_for(cfg, n_params, n_active, shape, step)
+    roof = analysis.from_compiled(compiled, chips, mflops)
+    coll = analysis.parse_collectives(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape_name, "step": step,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "variant": variant, "rules": rules_name, "kv_dtype": kv_dtype,
+        "serve_mode": serve_mode if step != "train" else None,
+        "n_params": n_params, "n_active_params": n_active,
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": mem,
+        "collectives": coll,
+        "roofline": roof.to_dict(),
+    }
+    return rec
+
+
+def artifact_path(arch, shape_name, multi_pod, variant="baseline"):
+    mesh_dir = "multi" if multi_pod else "single"
+    sub = ART_DIR / mesh_dir
+    sub.mkdir(parents=True, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return sub / f"{arch}__{shape_name}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--serve-mode", default="cfmm")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs.base import ARCH_IDS, SHAPES
+        jobs = []
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    out = artifact_path(arch, shape, mp, args.variant)
+                    if out.exists() and not args.force:
+                        continue
+                    jobs.append((arch, shape, mp))
+        print(f"dryrun: {len(jobs)} cells to compile")
+        procs = []
+        while jobs or procs:
+            while jobs and len(procs) < args.jobs:
+                arch, shape, mp = jobs.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--mesh", "multi" if mp else "single",
+                       "--serve-mode", args.serve_mode,
+                       "--variant", args.variant]
+                procs.append(((arch, shape, mp),
+                              subprocess.Popen(cmd)))
+            done = [(k, p) for k, p in procs if p.poll() is not None]
+            for k, p in done:
+                procs.remove((k, p))
+                status = "ok" if p.returncode == 0 else f"FAIL rc={p.returncode}"
+                print(f"  {k[0]}/{k[1]}/{'multi' if k[2] else 'single'}: {status}",
+                      flush=True)
+            time.sleep(1.0)
+        return
+
+    assert args.arch and args.shape
+    mp = args.mesh == "multi"
+    try:
+        rec = run_cell(args.arch, args.shape, mp, args.serve_mode,
+                       args.variant, rules_name=args.rules,
+                       extra={"unroll": True} if args.unroll else None,
+                       kv_dtype=args.kv_dtype)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "multi" if mp else "single", "variant": args.variant,
+               "error": traceback.format_exc()}
+    out = artifact_path(args.arch, args.shape, mp, args.variant)
+    out.write_text(json.dumps(rec, indent=1, default=float))
+    print(json.dumps({k: rec.get(k) for k in
+                      ("arch", "shape", "mesh", "skipped", "compile_s")},
+                     default=float))
+    if "error" in rec:
+        print(rec["error"], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod),
+axes (data, model).  Multi-pod: 2 x 16 x 16 = 512 chips with a leading
+pure-DP 'pod' axis (DCN-connected pods; only gradient all-reduces cross
+the pod boundary).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devices) >= n, (
+        f"need {n} devices, have {len(devices)} — run under "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry run) "
+        f"or on the full slice")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for CI-grade sharding tests (needs >= prod(shape) devices)."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

@@ -1,0 +1,350 @@
+"""Attention: GQA full/sliding-window with chunked-flash compute, decode
+with preallocated KV caches, and MLA (DeepSeek-V2 latent attention) with
+the absorbed decode path.
+
+The chunked streaming-softmax implementation is the pure-JAX lowering used
+everywhere (CPU dry-run included); on TPU the same schedule is the natural
+Pallas flash kernel.  QK^T/AV are activation x activation products — the
+paper's constant-parameter technique does not apply to them (DESIGN.md
+SS4); all projections do route through CompiledLinear.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _chunk_attn(q, k, v, qpos0, kpos0, causal, window):
+    """One (q-chunk, kv-chunk) tile -> (scores-applied values, m, l).
+
+    q: (B, KVH, G, Tq, D) — G query groups share one KV head (GQA without
+    materializing repeated K/V: a G-fold KV-traffic saving, SSPerf);
+    k: (B, KVH, Tk, D); v: (B, KVH, Tk, Dv).
+    """
+    Tq, Tk = q.shape[-2], k.shape[-2]
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k) / \
+        jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    s = s.astype(jnp.float32)
+    qpos = qpos0 + jnp.arange(Tq)[:, None]
+    kpos = kpos0 + jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (b,h,g,q)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return o.astype(jnp.float32), m, l
+
+
+def flash_attention(q, k, v, causal=True, window=None,
+                    q_chunk=1024, kv_chunk=1024):
+    """Streaming-softmax attention, GQA-native.
+
+    q: (B, H, T, D) or (B, KVH, G, T, D); k: (B, KVH, Tk, D);
+    v: (B, KVH, Tk, Dv).  K/V are never expanded across query groups —
+    each KV chunk is read once and serves all G groups."""
+    squeeze_g = q.ndim == 4
+    if squeeze_g:
+        q = q[:, :, None]
+    B, KVH, G, Tq, D = q.shape
+    Dv = v.shape[-1]  # may differ from D (MLA)
+    Tk = k.shape[2]
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    nq = -(-Tq // q_chunk)
+    nk = -(-Tk // kv_chunk)
+    pad_q = nq * q_chunk - Tq
+    pad_k = nk * kv_chunk - Tk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    offset = Tk - Tq  # queries sit at the end of the kv sequence
+
+    kc = k.reshape(B, KVH, nk, kv_chunk, D)
+    vc = v.reshape(B, KVH, nk, kv_chunk, Dv)
+
+    def q_block(qi, q_i):
+        qpos0 = qi * q_chunk + offset
+
+        def kv_step(carry, inputs):
+            o, m, l = carry
+            ki, k_i, v_i = inputs
+            kpos0 = ki * kv_chunk
+            o_new, m_new, l_new = _chunk_attn(q_i, k_i, v_i, qpos0, kpos0,
+                                              causal, window)
+            m_tot = jnp.maximum(m, m_new)
+            a_old = jnp.exp(m - m_tot)
+            a_new = jnp.exp(m_new - m_tot)
+            o = o * a_old[..., None] + o_new * a_new[..., None]
+            l = l * a_old + l_new * a_new
+            return (o, m_tot, l), None
+
+        o0 = jnp.zeros((B, KVH, G, q_chunk, Dv), jnp.float32)
+        m0 = jnp.full((B, KVH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        ks = jnp.arange(nk)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0),
+            (ks, jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0)))
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    qs = q.reshape(B, KVH, G, nq, q_chunk, D)
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qs, 3, 0)))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, KVH, G, nq * q_chunk, Dv)
+    out = out[:, :, :, :Tq].astype(v.dtype)
+    return out[:, :, 0] if squeeze_g else out
+
+
+def gqa_attention(q, k, v, causal=True, window=None, **kw):
+    """q: (B, Tq, H, D); k: (B, Tk, KVH, D); v: (B, Tk, KVH, Dv)."""
+    B, Tq, H, D = q.shape
+    KVH = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KVH
+    qg = q.reshape(B, Tq, KVH, G, D).transpose(0, 2, 3, 1, 4)  # B,KVH,G,T,D
+    o = flash_attention(qg, k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal, window, **kw)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (init / forward / decode)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, H, KVH, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "q": nn.linear_param(ks[0], d, H * D, ("embed", "heads_q")),
+        "k": nn.linear_param(ks[1], d, KVH * D, ("embed", "heads_kv")),
+        "v": nn.linear_param(ks[2], d, KVH * D, ("embed", "heads_kv")),
+        "o": nn.linear_param(ks[3], H * D, d, ("heads_q", "embed")),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rmsnorm_init(ks[0], D)
+        p["kn"] = rmsnorm_init(ks[1], D)
+    return p
+
+
+def gqa_forward(p, x, cfg, positions, window=None, causal=True,
+                cache=None, cross_kv=None, qat=False):
+    """Returns (out, new_cache).  cache: dict(k,v: (B, S_max, KVH, D),
+    length: int32 scalar) for decode; cross_kv: precomputed (k, v) for
+    encoder-decoder cross attention (no cache update)."""
+    B, T, d = x.shape
+    H, KVH, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_linear(p["q"], x, qat).reshape(B, T, H, D)
+    if cross_kv is None:
+        k = apply_linear(p["k"], x, qat).reshape(B, T, KVH, D)
+        v = apply_linear(p["v"], x, qat).reshape(B, T, KVH, D)
+    else:
+        k, v = cross_kv
+    if "qn" in p:
+        q = rmsnorm(p["qn"], q)
+        if cross_kv is None:
+            k = rmsnorm(p["kn"], k)
+    if cfg.pos == "rope" or cfg.pos == "mrope":
+        sections = cfg.mrope_sections if cfg.pos == "mrope" else None
+        q = apply_rope(q, positions, cfg.rope_theta, sections)
+        if cross_kv is None:
+            k = apply_rope(k, positions, cfg.rope_theta, sections)
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        quantized = cache["k"].dtype == jnp.int8
+        if quantized:  # int8 KV (per-token/head scales) — the paper's
+            # "activations rounded to 8 bits" extended to the cache
+            k_w, k_s = _kv_quant(k)
+            v_w, v_s = _kv_quant(v)
+        else:
+            k_w, v_w = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        if T == 1:  # decode: append to cache
+            idx = cache["length"]
+            start = (0, idx, 0, 0)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k_w, start)
+            cv = jax.lax.dynamic_update_slice(cache["v"], v_w, start)
+            new_cache = {"k": ck, "v": cv, "length": idx + 1}
+            scales = None
+            if quantized:
+                cks = jax.lax.dynamic_update_slice(cache["k_s"], k_s,
+                                                   (0, idx, 0))
+                cvs = jax.lax.dynamic_update_slice(cache["v_s"], v_s,
+                                                   (0, idx, 0))
+                new_cache.update({"k_s": cks, "v_s": cvs})
+                scales = (cks, cvs)
+            out = decode_attention(q, ck, cv, idx + 1, window, scales)
+            return apply_linear(p["o"], out.reshape(B, 1, H * D), qat), new_cache
+        else:       # prefill: write whole prompt
+            start = (0, 0, 0, 0)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k_w, start)
+            cv = jax.lax.dynamic_update_slice(cache["v"], v_w, start)
+            new_cache = {"k": ck, "v": cv, "length": jnp.int32(T)}
+            if quantized:
+                new_cache["k_s"] = jax.lax.dynamic_update_slice(
+                    cache["k_s"], k_s, (0, 0, 0))
+                new_cache["v_s"] = jax.lax.dynamic_update_slice(
+                    cache["v_s"], v_s, (0, 0, 0))
+    o = gqa_attention(q, k, v, causal=causal, window=window)
+    return apply_linear(p["o"], o.reshape(B, T, H * D), qat), new_cache
+
+
+def _kv_quant(x):
+    """Per-(token, head) symmetric int8: x (B, T, KVH, D) -> codes, scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0                 # (B, T, KVH)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_attention(q, ck, cv, length, window=None, scales=None):
+    """Single-token attention against the cache.  q: (B, 1, H, D);
+    ck/cv: (B, S_max, KVH, D); scales: (k_s, v_s) (B, S_max, KVH) when the
+    cache is int8-quantized."""
+    B, S, KVH, D = ck.shape
+    H = q.shape[2]
+    G = H // KVH
+    qh = q.reshape(B, KVH, G, D)
+    out_dtype = q.dtype
+    if scales is not None:  # int8 cache: dequant with per-token scales
+        ck = ck.astype(jnp.float32) * scales[0].astype(jnp.float32)[..., None]
+        cv = cv.astype(jnp.float32) * scales[1].astype(jnp.float32)[..., None]
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(D)
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < length
+    if window is not None:
+        valid &= pos >= length - window
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, cv.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(out_dtype)
+
+
+def gqa_cache_spec(cfg, B, S_max, dtype=jnp.bfloat16):
+    KVH, D = cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "k": nn.Param(jnp.zeros((B, S_max, KVH, D), dtype),
+                      ("batch", "kv_seq", "heads_kv_sharded", None)),
+        "v": nn.Param(jnp.zeros((B, S_max, KVH, D), dtype),
+                      ("batch", "kv_seq", "heads_kv_sharded", None)),
+        "length": nn.Param(jnp.zeros((), jnp.int32), ()),
+    }
+    if dtype == jnp.int8:  # per-(token, head) dequant scales
+        for s in ("k_s", "v_s"):
+            spec[s] = nn.Param(jnp.zeros((B, S_max, KVH), jnp.bfloat16),
+                               ("batch", "kv_seq", "heads_kv_sharded"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2), absorbed decode path
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "q": nn.linear_param(ks[0], d, H * (m.qk_nope + m.qk_rope),
+                             ("embed", "heads_q")),
+        "kv_down": nn.linear_param(ks[1], d, m.kv_lora + m.qk_rope,
+                                   ("embed", "kv_lora")),
+        "kv_norm": rmsnorm_init(ks[2], m.kv_lora),
+        "k_up": nn.linear_param(ks[3], m.kv_lora, H * m.qk_nope,
+                                ("kv_lora", "heads_q")),
+        "v_up": nn.linear_param(ks[4], m.kv_lora, H * m.v_dim,
+                                ("kv_lora", "heads_q")),
+        "o": nn.linear_param(ks[5], H * m.v_dim, d, ("heads_q", "embed")),
+    }
+
+
+def mla_forward(p, x, cfg, positions, cache=None, qat=False):
+    m = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    q = apply_linear(p["q"], x, qat).reshape(B, T, H, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    down = apply_linear(p["kv_down"], x, qat)
+    c_kv = rmsnorm(p["kv_norm"], down[..., :m.kv_lora])        # (B,T,lora)
+    k_rope = apply_rope(down[..., None, m.kv_lora:], positions,
+                        cfg.rope_theta)[:, :, 0]               # (B,T,rope)
+
+    if cache is not None and T == 1:
+        idx = cache["length"]
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                          c_kv.astype(cache["c_kv"].dtype),
+                                          (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                          k_rope.astype(cache["k_rope"].dtype),
+                                          (0, idx, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr, "length": idx + 1}
+        # absorbed path: q_nope pulled through k_up; output through v_up
+        from repro.core.compiled_linear import dense_of
+        k_up = dense_of(p["k_up"]).reshape(m.kv_lora, H, m.qk_nope)
+        qa = jnp.einsum("bthn,lhn->bthl", q_nope.astype(jnp.float32),
+                        k_up.astype(jnp.float32))              # (B,1,H,lora)
+        s = (jnp.einsum("bthl,bsl->bhts", qa, cc.astype(jnp.float32))
+             + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                          cr.astype(jnp.float32)))
+        s = s / jnp.sqrt(m.qk_nope + m.qk_rope)
+        valid = jnp.arange(cc.shape[1])[None, None, None, :] < idx + 1
+        w = jax.nn.softmax(jnp.where(valid, s, NEG_INF), axis=-1)
+        ctx = jnp.einsum("bhts,bsl->bthl", w, cc.astype(jnp.float32))
+        v_up = dense_of(p["v_up"]).reshape(m.kv_lora, H, m.v_dim)
+        o = jnp.einsum("bthl,lhv->bthv", ctx, v_up.astype(jnp.float32))
+        out = apply_linear(p["o"], o.reshape(B, 1, H * m.v_dim).astype(x.dtype),
+                           qat)
+        return out, new_cache
+
+    new_cache = None
+    if cache is not None:  # prefill into latent cache
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr, "length": jnp.int32(T)}
+    # expanded path (training / prefill)
+    k_nope = apply_linear(p["k_up"], c_kv, qat).reshape(B, T, H, m.qk_nope)
+    v = apply_linear(p["v_up"], c_kv, qat).reshape(B, T, H, m.v_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, T, H, m.qk_rope))],
+        axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = gqa_attention(qf, k, v, causal=True)
+    return apply_linear(p["o"], o.reshape(B, T, H * m.v_dim), qat), new_cache
+
+
+def mla_cache_spec(cfg, B, S_max, dtype=jnp.bfloat16):
+    if dtype == jnp.int8:  # latent cache is already compressed; keep bf16
+        dtype = jnp.bfloat16
+    m = cfg.mla
+    return {
+        "c_kv": nn.Param(jnp.zeros((B, S_max, m.kv_lora), dtype),
+                         ("batch", "kv_seq", None)),
+        "k_rope": nn.Param(jnp.zeros((B, S_max, m.qk_rope), dtype),
+                           ("batch", "kv_seq", None)),
+        "length": nn.Param(jnp.zeros((), jnp.int32), ()),
+    }

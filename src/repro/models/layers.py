@@ -1,0 +1,134 @@
+"""Shared model layers: norms, positional encodings, FFN/SwiGLU, embeddings.
+
+All matmul weights are nn.linear_param so the paper's constant-parameter
+compilation (core.compiled_linear) applies uniformly across architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(key, d):
+    return {"scale": nn.param(key, (d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(key, d):
+    return {"scale": nn.param(key, (d,), ("embed",), init="ones"),
+            "bias": nn.param(key, (d,), ("embed",), init="zeros")}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               mrope_sections: tuple | None = None) -> jax.Array:
+    """x: (B, T, H, D); positions: (B, T) or (3, B, T) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the frequency axis is split into sections, each
+    rotated by its own position stream (temporal / height / width).
+    """
+    D = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(D, theta), jnp.float32)      # (D/2,)
+    if positions.ndim == 3:                                      # M-RoPE
+        assert mrope_sections is not None
+        sec = np.cumsum((0,) + tuple(mrope_sections))
+        assert sec[-1] == D // 2, (mrope_sections, D)
+        parts = []
+        for i in range(len(mrope_sections)):
+            ang = (positions[i].astype(jnp.float32)[..., None]
+                   * freqs[sec[i]:sec[i + 1]])                   # (B,T,di)
+            parts.append(ang)
+        angles = jnp.concatenate(parts, axis=-1)                 # (B,T,D/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def sinusoidal_positions(T: int, d: int) -> np.ndarray:
+    pos = np.arange(T)[:, None]
+    dim = np.arange(0, d, 2)[None, :] / d
+    ang = pos / (10000.0 ** dim)
+    out = np.zeros((T, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / GeGLU / plain GELU)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d, d_ff, gated=True, suffix=("ffn_in", "ffn_out")):
+    ks = jax.random.split(key, 3)
+    p = {"down": nn.linear_param(ks[2], d_ff, d, (suffix[1], "embed"))}
+    if gated:
+        p["gate"] = nn.linear_param(ks[0], d, d_ff, ("embed", suffix[0]))
+        p["up"] = nn.linear_param(ks[1], d, d_ff, ("embed", suffix[0]))
+    else:
+        p["up"] = nn.linear_param(ks[1], d, d_ff, ("embed", suffix[0]))
+    return p
+
+
+def ffn(p, x, act="silu", qat=False):
+    actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[act]
+    up = apply_linear(p["up"], x, qat)
+    if "gate" in p:
+        h = actf(apply_linear(p["gate"], x, qat)) * up
+    else:
+        h = actf(up)
+    return apply_linear(p["down"], h, qat)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d):
+    return {"table": nn.param(key, (vocab, d), ("vocab", "embed"),
+                              scale=0.02)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def lm_head_init(key, d, vocab):
+    return {"w": nn.linear_param(key, d, vocab, ("embed", "vocab"))}
+
+
+def lm_head(params, x, tied_embed=None, qat=False):
+    if tied_embed is not None:
+        return x @ tied_embed.T.astype(x.dtype)
+    return apply_linear(params["w"], x, qat)

@@ -1,0 +1,564 @@
+"""Generic LM assembly: builds every assigned architecture from ArchConfig.
+
+Layers are grouped into a (prefix, periodic template x n_groups, suffix)
+structure; the periodic part runs under jax.lax.scan with per-template-
+position stacked parameters (keeps HLO size O(template) instead of
+O(n_layers)) and jax.checkpoint for activation rematerialization.  The
+same structure carries decode caches (KV / MLA-latent / SSM states).
+
+Supports: dense GQA (smollm/stablelm/phi3), local-global sliding window
+(gemma3), MLA + MoE (deepseek-v2-lite), pure MoE (olmoe), hybrid
+attn/mamba/MoE (jamba), RWKV6, encoder-decoder (whisper, stubbed audio
+frontend), M-RoPE VLM backbone (qwen2-vl, stubbed vision tower).
+"""
+from __future__ import annotations
+
+import functools
+from math import gcd
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.core.compiled_linear import apply_linear
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed, embed_init, ffn, ffn_init, layernorm,
+                                 layernorm_init, lm_head, lm_head_init,
+                                 rmsnorm, rmsnorm_init, sinusoidal_positions)
+from repro.distributed.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+def _sig_key(sig):
+    return (sig["kind"], bool(sig["moe"]), sig["attn_type"])
+
+
+def group_layers(sigs):
+    """-> (n_prefix, period, n_groups, n_suffix) covering the layer list."""
+    n = len(sigs)
+    keys = [_sig_key(s) for s in sigs]
+    best = None
+    for pre in range(0, 3):
+        for suf in range(0, 3):
+            m = n - pre - suf
+            if m <= 0:
+                continue
+            for p in range(1, min(m, 8) + 1):
+                if m % p:
+                    continue
+                mid = keys[pre:n - suf]
+                if all(mid[i] == mid[i % p] for i in range(m)):
+                    cand = (pre, p, m // p, suf)
+                    # prefer fewer unrolled layers, then smaller period
+                    score = (pre + suf, p)
+                    if best is None or score < best[0]:
+                        best = (score, cand)
+                    break
+    assert best is not None, "no periodic grouping found"
+    return best[1]
+
+
+# ---------------------------------------------------------------------------
+# Single block (mixer + FFN/MoE)
+# ---------------------------------------------------------------------------
+
+def _norm_init(key, cfg, d=None):
+    d = d or cfg.d_model
+    return (rmsnorm_init(key, d) if cfg.norm == "rmsnorm"
+            else layernorm_init(key, d))
+
+
+def _norm(p, x, cfg):
+    return (rmsnorm(p, x, cfg.norm_eps) if cfg.norm == "rmsnorm"
+            else layernorm(p, x, cfg.norm_eps))
+
+
+def block_init(key, cfg: ArchConfig, sig, cross=False):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": _norm_init(ks[0], cfg)}
+    if sig["kind"] == "attn":
+        p["mixer"] = (attn.mla_init(ks[1], cfg) if cfg.mla
+                      else attn.gqa_init(ks[1], cfg))
+    elif sig["kind"] == "mamba":
+        p["mixer"] = ssm_mod.mamba_init(ks[1], cfg)
+    elif sig["kind"] == "rwkv":
+        p["mixer"] = ssm_mod.rwkv6_init(ks[1], cfg)
+    else:
+        raise ValueError(sig)
+    if cross:
+        p["ln_x"] = _norm_init(ks[2], cfg)
+        p["xattn"] = attn.gqa_init(ks[3], cfg)
+    p["ln2"] = _norm_init(ks[4], cfg)
+    if sig["moe"]:
+        p["ffn"] = moe_mod.moe_init(ks[5], cfg)
+    elif sig["kind"] == "rwkv":
+        p["ffn"] = rwkv_cm_init(ks[5], cfg)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.first_layer_dense and sig["index"] == 0 and cfg.moe:
+            d_ff = cfg.d_ff  # cfg.d_ff holds the dense-layer width
+        p["ffn"] = ffn_init(ks[5], cfg.d_model, d_ff,
+                            gated=cfg.act in ("silu", "gelu"))
+    if cfg.post_block_norm:
+        p["post_ln1"] = _norm_init(ks[6], cfg)
+        p["post_ln2"] = _norm_init(ks[7], cfg)
+    return p
+
+
+def rwkv_cm_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, dff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": nn.param(ks[0], (d,), ("embed",), scale=0.5),
+        "mu_r": nn.param(ks[1], (d,), ("embed",), scale=0.5),
+        "wk": nn.linear_param(ks[1], d, dff, ("embed", "ffn_in")),
+        "wr": nn.linear_param(ks[2], d, d, ("embed", "embed_out")),
+        "wv": nn.linear_param(ks[3], dff, d, ("ffn_in", "embed")),
+    }
+
+
+def rwkv_cm(p, x, state=None, qat=False):
+    """RWKV channel-mix with token shift; returns (y, new_shift)."""
+    xf = x
+    if state is not None:
+        prev = jnp.concatenate([state.astype(x.dtype), x[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    new_shift = x[:, -1:]
+    xk = xf + (prev - xf) * p["mu_k"].astype(x.dtype)
+    xr = xf + (prev - xf) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(apply_linear(p["wk"], xk, qat)))
+    r = jax.nn.sigmoid(apply_linear(p["wr"], xr, qat))
+    return r * apply_linear(p["wv"], k, qat), new_shift
+
+
+def block_cache_init(cfg, sig, B, S_max, cross=False, kv_dtype=None):
+    import jax.numpy as _jnp
+    kv_dtype = kv_dtype or _jnp.bfloat16
+    if sig["kind"] == "attn":
+        c = (attn.mla_cache_spec(cfg, B, S_max, kv_dtype) if cfg.mla
+             else attn.gqa_cache_spec(cfg, B, S_max, kv_dtype))
+    elif sig["kind"] == "mamba":
+        c = ssm_mod.mamba_state_spec(cfg, B)
+    else:
+        c = {"tm": ssm_mod.rwkv6_state_spec(cfg, B),
+             "cm": nn.Param(jnp.zeros((B, 1, cfg.d_model), jnp.bfloat16),
+                            ("batch", None, "embed_s"))}
+    return c
+
+
+def block_apply(p, x, cfg, sig, positions, cache=None, cross_kv=None,
+                qat=False, decode=False, causal=True):
+    """Returns (x, new_cache, aux).
+
+    cache semantics: None -> training (no state tracked); provided with
+    decode=False -> prefill (state written from scratch); provided with
+    decode=True -> single-step decode (state read + advanced).
+    """
+    aux = {"lb_loss": 0.0, "z_loss": 0.0, "dropped_frac": 0.0}
+    h = _norm(p["ln1"], x, cfg)
+    new_cache = None
+    if sig["kind"] == "attn":
+        window = cfg.window if sig["attn_type"] == "local" else None
+        fwd = attn.mla_forward if cfg.mla else functools.partial(
+            attn.gqa_forward, window=window, causal=causal)
+        out, new_cache = fwd(p["mixer"], h, cfg, positions,
+                             cache=cache, qat=qat)
+    elif sig["kind"] == "mamba":
+        out, st = ssm_mod.mamba_forward(
+            p["mixer"], h, cfg, state=cache if decode else None, qat=qat)
+        new_cache = st if cache is not None else None
+    else:  # rwkv
+        tm_state = cache["tm"] if (cache is not None and decode) else None
+        out, tm_new = ssm_mod.rwkv6_forward(p["mixer"], h, cfg,
+                                            state=tm_state, qat=qat)
+    if cfg.post_block_norm:
+        out = _norm(p["post_ln1"], out, cfg)
+    x = x + out
+
+    if "xattn" in p and cross_kv is not None:
+        if isinstance(cross_kv, tuple):
+            kv = cross_kv
+        else:  # raw encoder states: project k/v here (training path)
+            Bx, Te, _ = cross_kv.shape
+            KVH, D = cfg.n_kv_heads, cfg.head_dim
+            kv = (apply_linear(p["xattn"]["k"], cross_kv,
+                               qat).reshape(Bx, Te, KVH, D),
+                  apply_linear(p["xattn"]["v"], cross_kv,
+                               qat).reshape(Bx, Te, KVH, D))
+        hx = _norm(p["ln_x"], x, cfg)
+        xo, _ = attn.gqa_forward(p["xattn"], hx, cfg, positions,
+                                 causal=False, cross_kv=kv, qat=qat)
+        x = x + xo
+
+    h2 = _norm(p["ln2"], x, cfg)
+    if sig["moe"]:
+        y, aux = moe_mod.moe_forward(p["ffn"], h2, cfg, qat=qat)
+    elif sig["kind"] == "rwkv":
+        cm_state = cache["cm"] if (cache is not None and decode) else None
+        y, cm_new = rwkv_cm(p["ffn"], h2, state=cm_state, qat=qat)
+        if cache is not None:
+            new_cache = {"tm": tm_new, "cm": cm_new}
+    else:
+        y = ffn(p["ffn"], h2, act=cfg.act, qat=qat)
+    if cfg.post_block_norm:
+        y = _norm(p["post_ln2"], y, cfg)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 12)
+    params = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+              "final_norm": _norm_init(ks[1], cfg)}
+    if not cfg.tie_embeddings:
+        params["head"] = lm_head_init(ks[2], cfg.d_model, cfg.vocab)
+    if cfg.encoder_decoder:
+        enc_sig = dict(kind="attn", moe=False, attn_type="global", index=0)
+        params["enc_blocks"] = nn.vmap_init(
+            lambda k: block_init(k, cfg, enc_sig), ks[3], cfg.n_enc_layers)
+        params["enc_norm"] = _norm_init(ks[4], cfg)
+        params["dec_blocks"] = nn.vmap_init(
+            lambda k: block_init(k, cfg, enc_sig, cross=True), ks[5],
+            cfg.n_layers)
+        return params
+    sigs = cfg.layer_sigs()
+    pre, period, groups, suf = group_layers(sigs)
+    params["prefix"] = [
+        block_init(jax.random.fold_in(ks[6], i), cfg, sigs[i])
+        for i in range(pre)]
+    params["template"] = [
+        nn.vmap_init(lambda k, j=j: block_init(k, cfg, sigs[pre + j]),
+                     jax.random.fold_in(ks[7], j), groups)
+        for j in range(period)]
+    params["suffix"] = [
+        block_init(jax.random.fold_in(ks[8], i), cfg,
+                   sigs[pre + groups * period + i])
+        for i in range(suf)]
+    return params
+
+
+def cache_init(cfg: ArchConfig, B: int, S_max: int, S_enc: int | None = None,
+               kv_dtype=None):
+    """Decode cache pytree (Param-boxed for sharding specs).
+
+    S_enc: enc-dec cross k/v length (must equal the prefill frame count;
+    defaults to 1500 = Whisper's 30 s post-conv frame budget).
+    kv_dtype: jnp.int8 stores the attention KV cache quantized with
+    per-(token, head) scales (SSPerf decode it-3).
+    """
+    pos = nn.Param(jnp.zeros((B,), jnp.int32), ("batch",))
+    if cfg.encoder_decoder:
+        KVH, D = cfg.n_kv_heads, cfg.head_dim
+        Se = S_enc or 1500
+        enc_sig = dict(kind="attn", moe=False, attn_type="global", index=0)
+        dec = [block_cache_init(cfg, enc_sig, B, S_max, kv_dtype=kv_dtype)
+               for _ in range(cfg.n_layers)]
+        cross = [{"k": nn.Param(jnp.zeros((B, Se, KVH, D), jnp.bfloat16),
+                                ("batch", "kv_seq", "heads_kv_sharded", None)),
+                  "v": nn.Param(jnp.zeros((B, Se, KVH, D), jnp.bfloat16),
+                                ("batch", "kv_seq", "heads_kv_sharded", None))}
+                 for _ in range(cfg.n_layers)]
+        return {"dec": _stack_caches(dec), "cross": _stack_caches(cross),
+                "pos": pos}
+    sigs = cfg.layer_sigs()
+    pre, period, groups, suf = group_layers(sigs)
+    out = {
+        "prefix": [block_cache_init(cfg, sigs[i], B, S_max,
+                                    kv_dtype=kv_dtype) for i in range(pre)],
+        "template": [
+            _stack_caches([block_cache_init(cfg, sigs[pre + j], B, S_max,
+                                            kv_dtype=kv_dtype)
+                           for _ in range(groups)])
+            for j in range(period)],
+        "suffix": [block_cache_init(cfg, sigs[pre + groups * period + i],
+                                    B, S_max, kv_dtype=kv_dtype)
+                   for i in range(suf)],
+        "pos": pos,
+    }
+    return out
+
+
+def _stack_caches(caches: list):
+    return jax.tree.map(
+        lambda *ps: nn.Param(jnp.stack([p.value for p in ps]),
+                             ("layers",) + ps[0].axes, ps[0].kind),
+        *caches, is_leaf=lambda x: isinstance(x, nn.Param))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _positions(cfg, batch, B, T, offset=None):
+    if cfg.pos == "mrope":
+        if "positions" in batch:
+            return batch["positions"]
+        base = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        if offset is not None:
+            base = base + offset[:, None]
+        return jnp.broadcast_to(base[None], (3, B, T))
+    base = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if offset is not None:
+        base = base + offset[:, None]
+    return base
+
+
+def _run_stack(params, x, cfg, sigs_info, positions, cache=None,
+               cross_kv=None, qat=False, decode=False, causal=True,
+               remat=True):
+    """Prefix blocks, scanned template, suffix blocks."""
+    pre, period, groups, suf = sigs_info["grouping"]
+    sigs = sigs_info["sigs"]
+    aux_sum = {"lb_loss": 0.0, "z_loss": 0.0, "dropped_frac": 0.0}
+    new_cache = {} if cache is not None else None
+
+    def run_one(p, x, sig, c):
+        return block_apply(p, x, cfg, sig, positions, cache=c,
+                           cross_kv=cross_kv, qat=qat, decode=decode,
+                           causal=causal)
+
+    for i in range(pre):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = run_one(params["prefix"][i], x, sigs[i], c)
+        aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+        if cache is not None:
+            new_cache.setdefault("prefix", []).append(nc)
+
+    def body(carry, xs):
+        x, acc = carry
+        newcs = []
+        for j in range(period):
+            c = xs["cache"][j] if cache is not None else None
+            xj, nc, aux = run_one(xs["params"][j], x, sigs[pre + j], c)
+            x = xj
+            acc = {k: acc[k] + aux[k] for k in acc}
+            newcs.append(nc if nc is not None else 0)
+        return (x, acc), {"cache": newcs} if cache is not None else 0
+
+    body_fn = jax.checkpoint(body) if remat else body
+    xs = {"params": params["template"]}
+    if cache is not None:
+        xs["cache"] = cache["template"]
+    if getattr(cfg, "unroll", False):
+        carry, ys_list = (x, aux_sum), []
+        for g in range(groups):
+            xs_g = jax.tree.map(lambda a: a[g], xs)
+            carry, y = body_fn(carry, xs_g)
+            ys_list.append(y)
+        (x, aux_sum) = carry
+        ys = (jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+              if cache is not None else 0)
+    else:
+        (x, aux_sum), ys = jax.lax.scan(body_fn, (x, aux_sum), xs)
+    if cache is not None:
+        new_cache["template"] = ys["cache"]
+
+    for i in range(suf):
+        li = pre + groups * period + i
+        c = cache["suffix"][i] if cache is not None else None
+        x, nc, aux = run_one(params["suffix"][i], x, sigs[li], c)
+        aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+        if cache is not None:
+            new_cache.setdefault("suffix", []).append(nc)
+    if cache is not None:
+        new_cache.setdefault("prefix", [])
+        new_cache.setdefault("suffix", [])
+    return x, new_cache, aux_sum
+
+
+def _grouping_info(cfg):
+    sigs = cfg.layer_sigs()
+    return {"sigs": sigs, "grouping": group_layers(sigs)}
+
+
+def _logits(params, x, cfg, qat):
+    x = _norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        return lm_head(None, x, tied_embed=params["embed"]["table"])
+    return lm_head(params["head"], x, qat=qat)
+
+
+def forward_train(params, batch, cfg: ArchConfig, qat=False):
+    """-> (logits, aux).  batch: tokens/labels (+frames for enc-dec)."""
+    if cfg.encoder_decoder:
+        return _whisper_forward(params, batch, cfg, qat=qat)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+    if cfg.post_block_norm:  # gemma-style embed scaling
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", None)
+    positions = _positions(cfg, batch, B, T)
+    info = _grouping_info(cfg)
+    x, _, aux = _run_stack(params, x, cfg, info, positions, qat=qat,
+                           remat=getattr(cfg, "remat", True))
+    x = shard(x, "batch", "seq", None)
+    return _logits(params, x, cfg, qat), aux
+
+
+def _whisper_forward(params, batch, cfg, qat=False, cache=None):
+    frames = batch["frames"]
+    B = frames.shape[0]
+    Te = frames.shape[1]
+    pe = jnp.asarray(sinusoidal_positions(Te, cfg.d_model), frames.dtype)
+    h = frames + pe[None]
+    enc_sig = dict(kind="attn", moe=False, attn_type="global", index=0)
+
+    def enc_body(x, p):
+        x, _, _ = block_apply(p, x, cfg, enc_sig, None, causal=False, qat=qat)
+        return x, 0
+
+    enc_fn = jax.checkpoint(enc_body)
+    h, _ = jax.lax.scan(enc_fn, h, params["enc_blocks"])
+    enc_out = _norm(params["enc_norm"], h, cfg)
+
+    tokens = batch["tokens"]
+    Td = tokens.shape[1]
+    x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+    x = x + jnp.asarray(sinusoidal_positions(Td, cfg.d_model), x.dtype)[None]
+
+    def dec_body(carry, p):
+        x = carry
+        x, _, _ = block_apply(p, x, cfg, enc_sig, None, cross_kv=enc_out,
+                              qat=qat, causal=True)
+        return x, 0
+
+    dec_fn = jax.checkpoint(dec_body)
+    x, _ = jax.lax.scan(dec_fn, x, params["dec_blocks"])
+    aux = {"lb_loss": 0.0, "z_loss": 0.0, "dropped_frac": 0.0}
+    return _logits(params, x, cfg, qat), aux
+
+
+def forward_prefill(params, batch, cfg: ArchConfig, cache):
+    """Prompt ingestion: returns (last-token logits, filled cache)."""
+    if cfg.encoder_decoder:
+        return _whisper_prefill(params, batch, cfg, cache)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+    if cfg.post_block_norm:
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq", None)
+    positions = _positions(cfg, batch, B, T)
+    info = _grouping_info(cfg)
+    x, new_cache, _ = _run_stack(params, x, cfg, info, positions,
+                                 cache=cache, decode=False)
+    new_cache["pos"] = jnp.full((B,), T, jnp.int32)
+    logits = _logits(params, x[:, -1:], cfg, qat=False)
+    return logits, new_cache
+
+
+def forward_decode(params, batch, cfg: ArchConfig, cache):
+    """One decode step: token (B, 1) + cache -> (logits, cache)."""
+    if cfg.encoder_decoder:
+        return _whisper_decode(params, batch, cfg, cache)
+    token = batch["token"]
+    B = token.shape[0]
+    x = embed(params["embed"], token).astype(jnp.bfloat16)
+    if cfg.post_block_norm:
+        x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+    positions = _positions(cfg, batch, B, 1, offset=cache["pos"])
+    info = _grouping_info(cfg)
+    x, new_cache, _ = _run_stack(params, x, cfg, info, positions,
+                                 cache=cache, decode=True)
+    new_cache["pos"] = cache["pos"] + 1
+    return _logits(params, x, cfg, qat=False), new_cache
+
+
+def _whisper_prefill(params, batch, cfg, cache):
+    frames = batch["frames"]
+    B, Te, _ = frames.shape
+    pe = jnp.asarray(sinusoidal_positions(Te, cfg.d_model), frames.dtype)
+    h = frames + pe[None]
+    enc_sig = dict(kind="attn", moe=False, attn_type="global", index=0)
+
+    def enc_body(x, p):
+        x, _, _ = block_apply(p, x, cfg, enc_sig, None, causal=False)
+        return x, 0
+
+    h, _ = jax.lax.scan(jax.checkpoint(enc_body), h, params["enc_blocks"])
+    enc_out = _norm(params["enc_norm"], h, cfg)
+
+    # fill cross k/v cache per decoder layer (cache sized to enc length)
+    KVH, D = cfg.n_kv_heads, cfg.head_dim
+    Sc = cache["cross"]["k"].shape[2]
+    assert Sc == Te, f"cross cache length {Sc} != encoder frames {Te}"
+
+    def cross_kv_of(pdec):
+        k = apply_linear(pdec["xattn"]["k"], enc_out).reshape(B, Te, KVH, D)
+        v = apply_linear(pdec["xattn"]["v"], enc_out).reshape(B, Te, KVH, D)
+        return k, v
+
+    ks, vs = jax.vmap(cross_kv_of)(params["dec_blocks"])       # (L, B, Te,..)
+    new_cross = {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)}
+
+    # run decoder prompt through self-attn caches
+    tokens = batch["tokens"]
+    Td = tokens.shape[1]
+    x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+    x = x + jnp.asarray(sinusoidal_positions(Td, cfg.d_model), x.dtype)[None]
+
+    def dec_body(carry, xs):
+        x = carry
+        x, nc, _ = block_apply(xs["p"], x, cfg, enc_sig, None,
+                               cache=xs["c"], cross_kv=(xs["ck"], xs["cv"]),
+                               causal=True, decode=False)
+        return x, nc
+
+    x, new_dec = jax.lax.scan(
+        jax.checkpoint(dec_body), x,
+        {"p": params["dec_blocks"], "c": cache["dec"], "ck": ks, "cv": vs})
+    new_cache = {"dec": new_dec, "cross": new_cross,
+                 "pos": jnp.full((B,), Td, jnp.int32)}
+    return _logits(params, x[:, -1:], cfg, qat=False), new_cache
+
+
+def _whisper_decode(params, batch, cfg, cache):
+    token = batch["token"]
+    B = token.shape[0]
+    x = embed(params["embed"], token).astype(jnp.bfloat16)
+    Td_max = cache["dec"]["k"].shape[2]
+    pos_table = jnp.asarray(sinusoidal_positions(Td_max, cfg.d_model), x.dtype)
+    x = x + pos_table[cache["pos"][0]][None, None]
+    enc_sig = dict(kind="attn", moe=False, attn_type="global", index=0)
+
+    def dec_body(carry, xs):
+        x = carry
+        x, nc, _ = block_apply(xs["p"], x, cfg, enc_sig, None,
+                               cache=xs["c"], cross_kv=(xs["ck"], xs["cv"]),
+                               causal=True, decode=True)
+        return x, nc
+
+    x, new_dec = jax.lax.scan(
+        dec_body, x,
+        {"p": params["dec_blocks"], "c": cache["dec"],
+         "ck": cache["cross"]["k"], "cv": cache["cross"]["v"]})
+    new_cache = {"dec": new_dec, "cross": cache["cross"],
+                 "pos": cache["pos"] + 1}
+    return _logits(params, x, cfg, qat=False), new_cache
+
+
+def loss_fn(logits, labels, aux=None, z_coef=1e-4, lb_coef=1e-2):
+    """Causal-LM cross entropy (next token) + MoE aux losses."""
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = labels[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    total = ce
+    metrics = {"ce": ce}
+    if aux is not None:
+        total = total + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+        metrics.update(aux)
+    return total, metrics

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, scatter dispatch,
+optional shared experts (DeepSeek-V2) — expert dim shards over 'model'
+(expert parallelism); dispatch/combine lower to all-to-all under pjit.
+
+Router stays fp32 and is excluded from constant-parameter compilation
+(routing stability); expert weights are stacked (E, d, d_ff) linear Params
+so compile_params packs them per expert.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+from repro.models.layers import ffn, ffn_init
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    p = {"router": nn.param(ks[0], (cfg.d_model, m.n_experts),
+                            ("embed", "experts"), scale=0.02)}
+    p["experts"] = nn.vmap_init(
+        lambda k: ffn_init(k, cfg.d_model, m.d_ff_expert, gated=m.gated,
+                           suffix=("ffn_in", "ffn_out")),
+        ks[1], m.n_experts)
+    # stacked leading axis is the expert dim, not 'layers'
+    p["experts"] = jax.tree.map(
+        lambda q: nn.Param(q.value, ("experts_stack",) + q.axes[1:], q.kind),
+        p["experts"], is_leaf=lambda x: isinstance(x, nn.Param))
+    if m.n_shared > 0:
+        p["shared"] = ffn_init(ks[2], cfg.d_model,
+                               m.d_ff_expert * m.n_shared, gated=m.gated)
+    return p
+
+
+def moe_forward(p, x, cfg, qat=False, capacity_factor=1.25):
+    """x: (B, T, d) -> (B, T, d); also returns aux losses dict."""
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.n_experts, m.top_k
+    xt = x.reshape(B * T, d)
+    n_tok = B * T
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    cap = int(max(8, -(-n_tok * K // E) * capacity_factor))
+    cap = min(cap, n_tok)
+    cap = ((cap + 7) // 8) * 8
+
+    # position of each (token, choice) within its expert queue
+    flat_e = expert_idx.reshape(-1)                            # (N*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < cap
+    tok_id = jnp.repeat(jnp.arange(n_tok), K)
+
+    # dispatch: scatter tokens into (E, cap, d); dropped slots fall off the
+    # end (mode='drop'), implementing the capacity overflow drop.  The
+    # sharding constraint forces the (tokens over data) -> (experts over
+    # model) boundary to lower as an all-to-all instead of a replicate.
+    from repro.distributed.sharding import shard
+    x_e = jnp.zeros((E, cap, d), x.dtype)
+    x_e = x_e.at[flat_e, jnp.where(keep, slot, cap)].set(
+        xt[tok_id], mode="drop")
+    x_e = shard(x_e, "experts_stack", None, None)
+    y_e = jax.vmap(lambda w, xe: ffn(w, xe, act=m.act, qat=qat))(
+        p["experts"], x_e)                                     # (E, cap, d)
+    y_e = shard(y_e, "experts_stack", None, None)
+
+    # combine: gather each kept (token, choice) result, weight, accumulate
+    gathered = y_e[flat_e, jnp.where(keep, slot, 0)]           # (N*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.zeros_like(xt).at[tok_id].add(gathered * w)
+
+    if "shared" in p:
+        out = out + ffn(p["shared"], xt, act=m.act, qat=qat)
+
+    # aux: load-balance loss (Switch) + router z-loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32),
+                  axis=0)
+    aux = {
+        "lb_loss": E * jnp.sum(me * ce),
+        "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(B, T, d), aux

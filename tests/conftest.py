@@ -1,0 +1,9 @@
+import os
+
+# Kernel tests exercise Pallas in interpret mode; smoke tests must see the
+# single real CPU device (the 512-device fan-out belongs to dryrun only).
+os.environ.setdefault("REPRO_PALLAS", "interpret")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,81 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cfmm
+from repro.core.quantize import quantize_int7
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_decompose_reconstruct_all_int7_values():
+    codes = jnp.arange(-63, 64, dtype=jnp.int8)
+    s, m, sh = cfmm.decompose(codes)
+    back = cfmm.reconstruct(s, m, sh)
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.arange(-63, 64, dtype=np.int32))
+    # paper counting argument: 32 odd magnitudes, shift <= 5
+    assert cfmm.N_UNIQUE_PRODUCTS == 32
+    assert int(jnp.max(sh)) <= cfmm.MAX_SHIFT == 5
+
+
+def test_unique_products_at_most_32():
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+    qt = quantize_int7(w)
+    assert cfmm.unique_product_count(qt.values) <= 32
+
+
+def test_product_table_is_odd_multiples():
+    x = jnp.array([3, -5, 0], jnp.int8)
+    tab = cfmm.product_table(x)
+    assert tab.shape == (3, 32)
+    np.testing.assert_array_equal(np.asarray(tab[0]),
+                                  3 * np.asarray(cfmm.ODD_VALUES))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16),
+       st.integers(2, 40), st.integers(1, 24))
+def test_matmul_dataflows_bit_exact(seed, M, K, N):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N))
+    qt = quantize_int7(w)
+    x = jax.random.randint(jax.random.fold_in(key, 1), (M, K),
+                           -127, 128, jnp.int8)
+    y_table = cfmm.cfmm_matmul_exact(x, cfmm.pack(qt.values, qt.scale))
+    y_mxu = cfmm.cfmm_matmul_int8(x, qt.values)
+    y_bits = cfmm.bitserial_matmul(x, qt.values)
+    ref = np.asarray(x, np.int32) @ np.asarray(qt.values, np.int32)
+    np.testing.assert_array_equal(np.asarray(y_table), ref)
+    np.testing.assert_array_equal(np.asarray(y_mxu), ref)
+    np.testing.assert_array_equal(np.asarray(y_bits), ref)
+
+
+def test_flops_amortization_accounting():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 256))
+    qt = quantize_int7(w)
+    acc = cfmm.cfmm_flops_saved(qt.values, n_common_uses=2304)
+    assert acc["amortization"] > 70  # 2304 products per ~30 adds (Fig 3)
+
+
+def test_cluster_rows_raises_block_sparsity():
+    """Constant-weight row clustering concentrates support into blocks the
+    trace-time-specialised kernel can skip (paper's dropped MACs)."""
+    import numpy as np
+    from repro.core.sparsity import block_sparsity, cluster_rows
+    from repro.core.quantize import quantize_int7
+    rng = np.random.RandomState(0)
+    # structured sparse weights: two row-populations with disjoint support
+    w = np.zeros((128, 64), np.float32)
+    rows_a = rng.choice(128, 64, replace=False)
+    mask_a = np.zeros(128, bool); mask_a[rows_a] = True
+    w[mask_a, :16] = rng.randn(64, 16)
+    w[~mask_a, 48:] = rng.randn(64, 16)
+    w = w[rng.permutation(128)]          # shuffle rows
+    q = quantize_int7(jnp.asarray(w)).values
+    before = block_sparsity(q, (32, 16))
+    perm = cluster_rows(np.asarray(q), block_k=32)
+    after = block_sparsity(jnp.asarray(np.asarray(q)[perm]), (32, 16))
+    assert after >= before
+    assert after >= 0.6                  # disjoint supports separate well

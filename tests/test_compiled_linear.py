@@ -1,0 +1,96 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import nn
+from repro.core import compiled_linear as cl
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _w(key, K, N):
+    return nn.Param(jax.random.normal(key, (K, N)) * 0.05,
+                    ("embed", "ffn_in"), "linear")
+
+
+def test_modes_agree_with_dense():
+    key = jax.random.PRNGKey(0)
+    p = {"w": _w(key, 256, 64)}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 256)) * 0.5
+    ref = cl.apply_linear(nn.unbox(p)["w"], x)
+    for mode in ("int8", "cfmm", "bitserial"):
+        packed = nn.unbox(cl.compile_params(p, mode=mode))
+        y = cl.apply_linear(packed["w"], x)
+        rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.03, (mode, rel)
+    # int8 and cfmm must be bit-identical (same storage + math)
+    y8 = cl.apply_linear(nn.unbox(cl.compile_params(p, mode="int8"))["w"], x)
+    yc = cl.apply_linear(nn.unbox(cl.compile_params(p, mode="cfmm"))["w"], x)
+    np.testing.assert_array_equal(np.asarray(y8), np.asarray(yc))
+
+
+def test_sparse_mode_matches_pruned_dense():
+    key = jax.random.PRNGKey(1)
+    p = {"w": _w(key, 512, 64)}
+    packed = nn.unbox(cl.compile_params(p, mode="sparse_cfmm", sparsity=0.8))
+    assert set(packed["w"]) == {"bitmap", "values", "scale"}
+    # reconstruct dense codes and compare against the packed forward
+    codes = cl.bitmap_unpack(packed["w"]["bitmap"], packed["w"]["values"])
+    x = jax.random.normal(key, (4, 512))
+    y = cl.apply_linear(packed["w"], x)
+    y_ref = cl.apply_linear({"values": codes,
+                             "scale": packed["w"]["scale"]}, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), rtol=1e-3,
+                               atol=1e-4)
+    sparsity = float(np.mean(np.asarray(codes) == 0))
+    assert 0.75 <= sparsity <= 0.85
+
+
+def test_compile_params_only_touches_linear_kind():
+    key = jax.random.PRNGKey(2)
+    p = {"w": _w(key, 64, 32),
+         "norm": nn.Param(jnp.ones((32,)), ("embed",)),
+         "emb": nn.Param(jax.random.normal(key, (100, 32)),
+                         ("vocab", "embed"))}
+    packed = cl.compile_params(p, mode="int8")
+    assert isinstance(packed["norm"], nn.Param)       # untouched
+    assert isinstance(packed["emb"], nn.Param)        # untouched (generic)
+    assert isinstance(packed["w"], dict)              # packed
+
+
+def test_stacked_expert_weights_pack_per_expert():
+    key = jax.random.PRNGKey(3)
+    w = nn.Param(jax.random.normal(key, (4, 64, 32)) * 0.05,
+                 ("experts_stack", "embed", "ffn_in"), "linear")
+    packed = cl.compile_params({"w": w}, mode="int8")
+    assert packed["w"]["values"].value.shape == (4, 64, 32)
+    assert packed["w"]["scale"].value.shape == (4, 1, 32)
+    # per-expert scales differ (independent channels)
+    s = np.asarray(packed["w"]["scale"].value)
+    assert np.std(s) > 0
+
+
+@given(st.integers(0, 10_000), st.sampled_from([64, 128, 256]),
+       st.sampled_from([16, 48]))
+def test_qdq_error_bounded(seed, K, N):
+    key = jax.random.PRNGKey(seed)
+    p = {"w": _w(key, K, N)}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, K))
+    ref = cl.apply_linear(nn.unbox(p)["w"], x)
+    y = cl.apply_linear(nn.unbox(cl.compile_params(p, mode="int8"))["w"], x)
+    rel = float(jnp.linalg.norm(y - ref) / jnp.maximum(jnp.linalg.norm(ref),
+                                                       1e-9))
+    assert rel < 0.05
+
+
+def test_qat_forward_matches_int7_grid():
+    from repro.core.quantize import fake_quant_int7, quantize_int7
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    fq = fake_quant_int7(w)
+    qt = quantize_int7(w)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(qt.dequantize()),
+                               rtol=1e-5, atol=1e-7)

@@ -1,0 +1,55 @@
+"""Deliverable (e) guard: the multi-pod dry-run artifacts must exist for
+every (arch x shape x mesh) cell and be internally consistent."""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_applicable, get_config
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not ART.exists(), reason="run `python -m repro.launch.dryrun --all` first")
+
+
+@pytest.mark.parametrize("mesh_dir,chips", [("single", 256), ("multi", 512)])
+def test_all_cells_have_artifacts(mesh_dir, chips):
+    missing, failed = [], []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = ART / mesh_dir / f"{arch}__{shape}.json"
+            if not p.exists():
+                missing.append(p.name)
+                continue
+            d = json.loads(p.read_text())
+            if "error" in d:
+                failed.append(p.name)
+                continue
+            ok, why = cell_applicable(get_config(arch), shape)
+            if not ok:
+                assert d.get("skipped"), p.name
+                continue
+            assert d["chips"] == chips, p.name
+            r = d["roofline"]
+            assert r["flops_per_device"] >= 0
+            assert r["dominant"] in ("compute", "memory", "collective")
+    assert not missing, f"missing artifacts: {missing}"
+    assert not failed, f"failed cells: {failed}"
+
+
+def test_multi_pod_cells_show_pod_axis_traffic():
+    """At least the big train cells must communicate across the pod axis
+    (gradient all-reduce) — more wire than single-pod."""
+    import math
+    grew = 0
+    checked = 0
+    for arch in ("phi3_medium_14b", "jamba_v01_52b", "qwen2_vl_7b"):
+        s = json.loads((ART / "single" / f"{arch}__train_4k.json").read_text())
+        m = json.loads((ART / "multi" / f"{arch}__train_4k.json").read_text())
+        if "roofline" in s and "roofline" in m:
+            checked += 1
+            if (m["roofline"]["wire_bytes_per_device"]
+                    >= s["roofline"]["wire_bytes_per_device"] * 0.99):
+                grew += 1
+    assert checked and grew >= checked - 1

@@ -1,0 +1,107 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import flash_attention_ref
+from repro.models import attention as attn
+from repro.models.layers import apply_rope, layernorm, layernorm_init, \
+    rmsnorm, rmsnorm_init
+
+
+def test_rmsnorm_unit_scale():
+    p = {"scale": jnp.ones((16,))}
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 7.0
+    y = rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_layernorm_zero_mean():
+    p = layernorm_init(jax.random.PRNGKey(0), 16)
+    p = jax.tree.map(lambda q: q.value, p,
+                     is_leaf=lambda x: hasattr(x, "axes"))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) + 3.0
+    y = layernorm(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 64))
+    pos = jnp.arange(8)[None]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+    def dot_at(p):
+        qr = apply_rope(q, jnp.array([[p]]))
+        kr = apply_rope(k, jnp.array([[p + 3]]))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(0) - dot_at(17)) < 1e-3
+
+
+def test_mrope_sections_match_standard_when_positions_equal():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 2, 32))
+    pos = jnp.arange(6)[None].repeat(2, 0)
+    std = apply_rope(x, pos)
+    mp = jnp.broadcast_to(pos[None], (3, 2, 6))
+    mr = apply_rope(x, mp, mrope_sections=(8, 4, 4))
+    np.testing.assert_allclose(np.asarray(std), np.asarray(mr), rtol=1e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16),
+                                           (False, None)])
+def test_flash_attention_matches_naive(causal, window):
+    B, H, T, D = 2, 3, 48, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, T, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, T, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, T, D))
+    out = attn.flash_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=16, kv_chunk=16)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_rectangular_kv():
+    """Queries at the end of a longer kv sequence (prefill continuation)."""
+    B, H, Tq, Tk, D = 1, 2, 8, 32, 16
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (B, H, Tq, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, Tk, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, Tk, D))
+    out = attn.flash_attention(q, k, v, causal=True, q_chunk=4, kv_chunk=8)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_equals_mha_when_groups_one():
+    B, T, H, D = 2, 12, 4, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, T, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, D))
+    o1 = attn.gqa_attention(q, k, v)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_matches_full():
+    B, S, KVH, G, D = 2, 16, 2, 3, 8
+    H = KVH * G
+    key = jax.random.PRNGKey(0)
+    ck = jax.random.normal(key, (B, S, KVH, D))
+    cv = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KVH, D))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, H, D))
+    length = 10
+    out = attn.decode_attention(q, ck, cv, length)
+    full = attn.gqa_attention(q, ck[:, :length], cv[:, :length], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting shapes and finiteness (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import nn
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import lm
+from repro.training import optimizer
+from repro.training.train_step import make_train_step
+
+
+def _batch(cfg, key, B=2, T=32):
+    if cfg.encoder_decoder:
+        return {"frames": jnp.zeros((B, T, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.random.randint(key, (B, 16), 1, cfg.vocab),
+                "labels": jax.random.randint(key, (B, 16), 1, cfg.vocab)}
+    b = {"tokens": jax.random.randint(key, (B, T), 1, cfg.vocab),
+         "labels": jax.random.randint(key, (B, T), 1, cfg.vocab)}
+    if cfg.pos == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(T)[None, None], (3, B, T))
+        b["positions"] = pos
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = nn.unbox(lm.init(key, cfg))
+    batch = _batch(cfg, key)
+    logits, aux = lm.forward_train(params, batch, cfg)
+    T_out = 16 if cfg.encoder_decoder else 32
+    assert logits.shape == (2, T_out, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = nn.unbox(lm.init(key, cfg))
+    opt_state = optimizer.init(params)
+    step = jax.jit(make_train_step(cfg, optimizer.OptConfig(lr=1e-3,
+                                                            warmup_steps=2,
+                                                            total_steps=10)))
+    new_p, new_o, metrics = step(params, opt_state, _batch(cfg, key))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_o.step) == 1
+    # parameters actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_p))
+    assert max(moved) > 0
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    spec = {
+        "smollm_360m": (32, 960, 15, 5, 2560, 49152),
+        "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+        "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "jamba_v01_52b": (32, 4096, 32, 8, 14336, 65536),
+        "deepseek_v2_lite_16b": (27, 2048, 16, 16, 10944, 102400),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "rwkv6_7b": (32, 4096, 64, 64, 14336, 65536),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+    }
+    for arch, (L, d, H, KV, dff, V) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab) == (L, d, H, KV, dff, V), arch
+
+
+def test_moe_configs():
+    c = get_config("deepseek_v2_lite_16b")
+    assert c.moe.n_experts == 64 and c.moe.top_k == 6 and c.moe.n_shared == 2
+    assert c.moe.d_ff_expert == 1408 and c.mla.kv_lora == 512
+    c = get_config("olmoe_1b_7b")
+    assert c.moe.n_experts == 64 and c.moe.top_k == 8
+    c = get_config("jamba_v01_52b")
+    assert c.moe.n_experts == 16 and c.moe.top_k == 2
+    assert c.layer_pattern.count("mamba") == 7  # 1:7 attn:mamba

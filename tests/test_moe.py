@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.configs.base import get_config
+from repro.models import moe
+from repro.models.layers import ffn
+
+
+def _setup(top_k=1, n_experts=8):
+    import dataclasses
+    cfg = get_config("olmoe_1b_7b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, top_k=top_k,
+                                     n_experts=n_experts))
+    p = nn.unbox(moe.moe_init(jax.random.PRNGKey(0), cfg))
+    return cfg, p
+
+
+def test_top1_equals_selected_expert():
+    cfg, p = _setup(top_k=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, cfg.d_model))
+    y, aux = moe.moe_forward(p, x, cfg, capacity_factor=8.0)
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]
+    eidx = np.asarray(jnp.argmax(logits, -1))
+    for t in range(6):
+        w_e = jax.tree.map(lambda a: a[eidx[t]], p["experts"])
+        expect = ffn(w_e, x[0, t][None], act=cfg.moe.act)[0]
+        np.testing.assert_allclose(np.asarray(y[0, t]), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_gates_normalized_topk():
+    cfg, p = _setup(top_k=2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model))
+    y, aux = moe.moe_forward(p, x, cfg, capacity_factor=8.0)
+    assert y.shape == x.shape
+    assert float(aux["lb_loss"]) > 0.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_capacity_drops_tokens():
+    cfg, p = _setup(top_k=2, n_experts=8)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 32, cfg.d_model))
+    _, aux_tight = moe.moe_forward(p, x, cfg, capacity_factor=0.25)
+    _, aux_loose = moe.moe_forward(p, x, cfg, capacity_factor=8.0)
+    assert float(aux_tight["dropped_frac"]) > 0.0
+    assert float(aux_loose["dropped_frac"]) == 0.0
+
+
+def test_shared_experts_added():
+    import dataclasses
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    p = nn.unbox(moe.moe_init(jax.random.PRNGKey(0), cfg))
+    assert "shared" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+    y, _ = moe.moe_forward(p, x, cfg, capacity_factor=8.0)
+    assert y.shape == x.shape
+
+
+def test_moe_grads_flow_to_router_and_experts():
+    cfg, p = _setup(top_k=2)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, cfg.d_model))
+
+    def loss(p_):
+        y, aux = moe.moe_forward(p_, x, cfg)
+        return jnp.sum(jnp.square(y)) + 0.01 * aux["lb_loss"]
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0
+    assert float(jnp.max(jnp.abs(g["experts"]["up"]))) > 0

@@ -1,0 +1,54 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as q
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 64), st.integers(2, 48))
+def test_int7_roundtrip_error_bound(seed, rows, cols):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    qt = q.quantize_int7(w, axis=-1)
+    assert qt.values.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(qt.values))) <= q.INT7_MAX
+    # per-element error bounded by half a quantization step of its channel
+    err = jnp.abs(w - qt.dequantize())
+    assert bool(jnp.all(err <= 0.5 * qt.scale + 1e-6))
+
+
+def test_scale_is_per_output_channel():
+    w = jnp.array([[1.0, 100.0], [2.0, 50.0]])
+    qt = q.quantize_int7(w, axis=-1)
+    assert qt.scale.shape == (1, 2)
+    np.testing.assert_allclose(np.asarray(qt.scale)[0],
+                               [2 / 63, 100 / 63], rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_ternary_residual_exact(seed):
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (64,),
+                               -q.INT7_MAX, q.INT7_MAX + 1)
+    t = q.ternary_residual_decompose(codes)
+    assert t.shape == (64, 6)
+    assert set(np.unique(np.asarray(t))) <= {-1, 0, 1}
+    back = q.ternary_residual_reconstruct(t)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_fake_quant_straight_through_grad():
+    w = jnp.linspace(-1.0, 1.0, 32).reshape(4, 8)
+    g = jax.grad(lambda x: jnp.sum(q.fake_quant_int7(x)))(w)
+    # STE: gradient flows as if identity through round
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.mean(jnp.abs(g))) > 0.5
+
+
+def test_act_quant_saturates_to_int8():
+    x = jnp.array([1e6, -1e6, 0.0])
+    at = q.quantize_act_int8(x)
+    assert int(jnp.max(jnp.abs(at.values))) <= 127

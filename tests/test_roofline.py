@@ -1,0 +1,70 @@
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.roofline import analysis as ra
+from repro.roofline import analytic
+
+HLO_SAMPLE = """
+  %ag = bf16[256,1024]{1,0} all-gather(bf16[16,1024]{1,0} %p0), dimensions={0}
+  %ar.1 = f32[4096]{0} all-reduce(f32[4096]{0} %x), to_apply=%add
+  tuple = (f32[128,64]{1,0}, f32[128,64]{1,0}) all-to-all(f32[128,64] %a, f32[128,64] %b)
+  %rs = bf16[8,512]{1,0} reduce-scatter(bf16[64,512]{1,0} %y), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(u8[1024]{0} %z)
+  %dot = f32[12,12] dot(f32[12,4] %l, f32[4,12] %r)
+"""
+
+
+def test_parse_collectives():
+    out = ra.parse_collectives(HLO_SAMPLE)
+    assert out["all-gather"]["bytes"] == 256 * 1024 * 2
+    assert out["all-reduce"]["bytes"] == 4096 * 4
+    assert out["all-reduce"]["wire_bytes"] == 2 * 4096 * 4   # ring 2x
+    assert out["all-to-all"]["bytes"] == 2 * 128 * 64 * 4    # tuple out
+    assert out["reduce-scatter"]["bytes"] == 8 * 512 * 2
+    assert out["collective-permute"]["bytes"] == 1024
+    assert "dot" not in out
+
+
+def test_roofline_terms_and_dominance():
+    r = ra.Roofline(flops=197e12 * 0.01, hbm_bytes=819e9 * 0.02,
+                    wire_bytes=50e9 * 0.005, chips=256,
+                    model_flops=197e12 * 0.01 * 256 * 0.5)
+    assert abs(r.compute_s - 0.01) < 1e-9
+    assert abs(r.memory_s - 0.02) < 1e-9
+    assert abs(r.collective_s - 0.005) < 1e-9
+    assert r.dominant == "memory"
+    assert abs(r.useful_flops_fraction - 0.5) < 1e-9
+    assert abs(r.roofline_fraction - 0.25) < 1e-9   # 0.5*compute / memory
+
+
+def test_analytic_decode_weight_traffic_ordering():
+    """The paper's packing must strictly reduce the decode weight term."""
+    cfg = get_config("phi3_medium_14b")
+    mesh = {"data": 16, "model": 16}
+    n = 14_000_000_000
+    w, tot = {}, {}
+    for mode in ("dense", "int8", "sparse_cfmm"):
+        m = analytic.model_cell(cfg, "decode_32k", mesh, n, n, mode)
+        w[mode] = m.breakdown["weight_bytes_dev"]
+        tot[mode] = m.hbm_device
+    assert w["sparse_cfmm"] < w["int8"] < w["dense"]
+    assert w["dense"] / w["sparse_cfmm"] > 5.0
+    # phi3's kv=10 heads don't divide the 16-way model axis -> the cache
+    # replicates and dominates; split-KV sharding recovers the win
+    m_split = analytic.model_cell(cfg, "decode_32k", mesh, n, n,
+                                  "sparse_cfmm", rules_name="serve_splitkv")
+    assert m_split.hbm_device < 0.2 * tot["sparse_cfmm"]
+
+
+def test_analytic_train_is_not_collective_dominated_single_pod():
+    cfg = get_config("smollm_360m")
+    mesh = {"data": 16, "model": 16}
+    m = analytic.model_cell(cfg, "train_4k", mesh, 362_000_000, 362_000_000)
+    assert m.flops_device > 0 and m.hbm_device > 0 and m.wire_device > 0
+
+
+def test_active_params_moe():
+    cfg = get_config("olmoe_1b_7b")
+    total = 7_000_000_000
+    active = ra.active_param_count(cfg, total)
+    assert active < total * 0.35   # 8 of 64 experts active

@@ -1,0 +1,96 @@
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_spec_divisibility_guard():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for(("embed", "heads_q"), (960, 960), shd.TRAIN_RULES,
+                        mesh)
+    assert spec == P("data", "model")   # 960 % 16 == 0: both shard
+    # truly indivisible out dim is dropped (replicated)
+    spec = shd.spec_for(("embed", "heads_q"), (960, 15 * 66),
+                        shd.TRAIN_RULES, mesh)
+    assert spec == P("data")
+    # dp_only folds both mesh axes onto the batch/in dims
+    spec = shd.spec_for(("embed", "heads_q"), (1024, 512),
+                        shd.DP_ONLY_TRAIN_RULES, mesh)
+    assert spec == P(("data", "model"))
+
+
+def test_spec_uniqueness_guard():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for(("experts_stack", "embed", "ffn_in"),
+                        (64, 2048, 1024), shd.TRAIN_RULES, mesh)
+    # experts take 'model'; ffn_in must NOT reuse it
+    assert spec == P("model", "data")
+
+
+def test_param_shardings_tree():
+    from repro import nn
+    import jax.numpy as jnp
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    tree = {"w": nn.Param(jnp.zeros((64, 32)), ("embed", "ffn_in"), "linear")}
+    sh = shd.param_shardings(tree, mesh)
+    assert sh["w"].spec == P()   # axes of size 1 -> everything replicated
+
+
+DRYRUN_MINI = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import functools, jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro import nn
+from repro.configs.base import get_config
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.training import optimizer
+from repro.training.train_step import make_train_step
+
+cfg = get_config("{arch}").reduced()
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"))
+params = jax.eval_shape(functools.partial(lm.init, cfg=cfg),
+                        jax.random.PRNGKey(0))
+p_shard = shd.param_shardings(params, mesh)
+opt_shapes = jax.eval_shape(optimizer.init, nn.unbox(params))
+o_shard = optimizer.OptState(
+    jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    p_shard, p_shard)
+batch = {{"tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32)}}
+b_shard = shd.batch_shardings(batch, mesh)
+with mesh:
+    lowered = jax.jit(make_train_step(cfg),
+                      in_shardings=(p_shard, o_shard, b_shard)).lower(
+        nn.unbox(params), opt_shapes, batch)
+    compiled = lowered.compile()
+print("MINI_DRYRUN_OK", compiled.cost_analysis() is not None)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["smollm_360m", "olmoe_1b_7b"])
+def test_mini_dryrun_2x2_mesh(arch, tmp_path):
+    """Real lower+compile on a 2x2 host-device mesh (subprocess so the
+    device-count override doesn't leak into this process)."""
+    script = tmp_path / "mini.py"
+    script.write_text(DRYRUN_MINI.format(arch=arch))
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, timeout=420,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert "MINI_DRYRUN_OK" in r.stdout, r.stderr[-2000:]

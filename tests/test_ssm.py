@@ -1,0 +1,77 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.configs.base import get_config
+from repro.models import ssm
+
+
+@pytest.fixture(scope="module")
+def mamba_cfg():
+    return get_config("jamba_v01_52b").reduced()
+
+
+@pytest.fixture(scope="module")
+def rwkv_cfg():
+    return get_config("rwkv6_7b").reduced()
+
+
+def test_mamba_chunked_matches_sequential(mamba_cfg):
+    cfg = mamba_cfg
+    key = jax.random.PRNGKey(0)
+    p = nn.unbox(ssm.mamba_init(key, cfg))
+    x = jax.random.normal(key, (2, 20, cfg.d_model), jnp.float32)
+    y_chunk, _ = ssm.mamba_forward(p, x, cfg, chunk=8)
+    y_seq = ssm.mamba_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_mamba_state_carry_decode(mamba_cfg):
+    """prefill(T) then decode(1) == forward(T+1) at the last position."""
+    cfg = mamba_cfg
+    key = jax.random.PRNGKey(1)
+    p = nn.unbox(ssm.mamba_init(key, cfg))
+    x = jax.random.normal(key, (1, 9, cfg.d_model), jnp.float32)
+    full, _ = ssm.mamba_forward(p, x, cfg, chunk=4)
+    _, st = ssm.mamba_forward(p, x[:, :8], cfg, chunk=4)
+    step, _ = ssm.mamba_forward(p, x[:, 8:9], cfg, state=st)
+    np.testing.assert_allclose(np.asarray(step[:, 0], np.float32),
+                               np.asarray(full[:, 8], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_rwkv_chunked_matches_stepwise(rwkv_cfg):
+    cfg = rwkv_cfg
+    key = jax.random.PRNGKey(0)
+    p = nn.unbox(ssm.rwkv6_init(key, cfg))
+    B, T = 1, 12
+    x = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32)
+    y_chunk, _ = ssm.rwkv6_forward(p, x, cfg, chunk=4)
+    # stepwise decode reference
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    state = {"shift": jnp.zeros((B, 1, cfg.d_model), jnp.float32),
+             "wkv": jnp.zeros((B, H, hd, hd), jnp.float32)}
+    outs = []
+    for t in range(T):
+        y, state = ssm.rwkv6_forward(p, x[:, t:t + 1], cfg, state=state)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=4e-2, atol=4e-2)
+
+
+def test_rwkv_decay_in_unit_interval(rwkv_cfg):
+    cfg = rwkv_cfg
+    p = nn.unbox(ssm.rwkv6_init(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model))
+    y, st = ssm.rwkv6_forward(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    assert bool(jnp.all(jnp.isfinite(st["wkv"])))
