@@ -20,13 +20,116 @@ from repro.roofline.analysis import HBM_BW, PEAK_BF16, PEAK_INT8
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warmup call (jax.block_until_ready handles tuples/pytrees; the
+    # old tuple special-case re-ran fn a second time and skewed jit-cache
+    # warmup)
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# Convolution: fused implicit-GEMM vs the materialized-im2col baseline
+# ---------------------------------------------------------------------------
+
+def _conv_baseline(x, codes, w_scale, gamma, beta, sc, k, stride):
+    """The pre-refactor conv chain: materialize f32 im2col patches in HBM,
+    dynamic-quantize them, matmul, then separate Collector ops."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k, k), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    q, s_x = cl.act_quant(patches)
+    acc = jax.lax.dot_general(q, codes,
+                              dimension_numbers=(((3,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (s_x * w_scale.reshape(1, -1))
+    y = y * gamma + beta + sc
+    return jax.nn.relu(y)
+
+
+def conv_traffic_bytes(hw, c_in, c_out, k, stride, fused, quant_out=False):
+    """Analytic per-image HBM *activation* traffic (weights excluded — both
+    paths stream the same constant codes).
+
+    Baseline: f32 input read, f32 patch tensor write+read (the k*k-inflated
+    im2col buffer), int8 requant write+read, f32 accumulator write, and one
+    fused elementwise Collector pass (read y + shortcut, write y).
+    Fused:    int8 input read, shortcut read, one f32 (or int8 with the
+    quantization-domain pass) output write.
+    """
+    ho = wo = -(-hw // stride)
+    m, patch = ho * wo, c_in * k * k
+    out_f32, out_int8 = 4 * m * c_out, m * c_out
+    if fused:
+        read = hw * hw * c_in + out_f32          # int8 input + shortcut
+        write = out_int8 if quant_out else out_f32
+        return read + write
+    read = (4 * hw * hw * c_in        # f32 input
+            + 4 * m * patch           # patches back in for act_quant
+            + m * patch               # int8 patches into the matmul
+            + out_f32 + out_f32)      # y + shortcut into Collector ops
+    write = (4 * m * patch            # materialized f32 patch tensor
+             + m * patch              # int8 requantized patches
+             + out_f32                # matmul accumulator
+             + out_f32)               # Collector output
+    return read + write
+
+
+def run_conv(full=False):
+    """Fused implicit-GEMM conv vs materialized im2col + separate epilogue:
+    CPU wall-time (jnp lowerings of both) and the analytic HBM activation-
+    traffic model.  Persisted by benchmarks/run.py to BENCH_conv.json."""
+    N, hw, c, k = (2, 56, 256, 3) if full else (1, 28, 128, 3)
+    stride = 1
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, hw, hw, c)) * 0.5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (c * k * k, c)) * 0.05
+    qt = quantize_int7(w)
+    gamma = jax.random.normal(jax.random.fold_in(key, 2), (c,))
+    beta = jax.random.normal(jax.random.fold_in(key, 3), (c,))
+    sc = jax.random.normal(jax.random.fold_in(key, 4), (N, hw, hw, c))
+
+    baseline = jax.jit(lambda a, s: _conv_baseline(
+        a, qt.values, qt.scale.reshape(-1), gamma, beta, s, k, stride))
+
+    def _fused(a, s):
+        q, s_x = cl.act_quant(a)
+        return ops.conv2d(q, qt.values, k, stride, x_scale=s_x,
+                          w_scale=qt.scale.reshape(-1), gamma=gamma,
+                          beta=beta, shortcut=s, relu=True)
+
+    fused = jax.jit(_fused)
+    t_base = _time(baseline, x, sc)
+    t_fused = _time(fused, x, sc)
+    layer = f"{hw}x{hw}x{c} k{k}s{stride}"
+    print(f" conv {layer} (batch {N}) CPU-lowering walltime:")
+    print(f"   im2col + separate epilogue {t_base * 1e3:8.2f} ms")
+    print(f"   fused implicit-GEMM        {t_fused * 1e3:8.2f} ms "
+          f"({t_base / t_fused:.2f}x)")
+
+    traffic = {}
+    for kk in (1, 3, 7):
+        b = conv_traffic_bytes(hw, c, c, kk, stride, fused=False)
+        f = conv_traffic_bytes(hw, c, c, kk, stride, fused=True)
+        fq = conv_traffic_bytes(hw, c, c, kk, stride, fused=True,
+                                quant_out=True)
+        traffic[f"k{kk}"] = {"baseline": b, "fused_f32": f,
+                             "fused_int8": fq, "ratio_f32": b / f,
+                             "ratio_int8": b / fq}
+        print(f"   k={kk} HBM activation traffic/image: baseline "
+              f"{b / 1e6:6.2f} MB vs fused {f / 1e6:6.2f} MB "
+              f"({b / f:5.1f}x; {b / fq:5.1f}x with int8 quant-domain out)")
+    assert traffic["k3"]["ratio_f32"] >= 5.0, traffic["k3"]
+    return {
+        "layer": layer, "batch": N,
+        "cpu_ms": {"im2col_baseline": t_base * 1e3,
+                   "fused_implicit_gemm": t_fused * 1e3},
+        "cpu_speedup": t_base / t_fused,
+        "hbm_activation_traffic": traffic,
+    }
 
 
 def run(full=False):

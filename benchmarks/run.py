@@ -1,46 +1,91 @@
 """Benchmark harness — one module per paper table/figure plus the
 roofline table and kernel micro-benchmarks.
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
-Outputs land in experiments/bench/ and are summarized to stdout.
+Outputs land in experiments/bench/ and are summarized to stdout; each
+section also *appends* to a BENCH_<name>.json trajectory file at the repo
+root ({ts, git, args, result} per run), so perf is tracked across PRs.
+--smoke runs a quick subset (used by CI on every push).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import subprocess
 import time
 
-OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT_DIR = ROOT / "experiments" / "bench"
+
+SMOKE_SECTIONS = ("table1_design_params", "conv")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              cwd=ROOT, capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _append_trajectory(name: str, entry: dict) -> None:
+    path = ROOT / f"BENCH_{name}.json"
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+            assert isinstance(history, list)
+        except Exception:
+            # never overwrite an unparseable trajectory (e.g. merge
+            # conflict markers) — park it and start a fresh history
+            bak = path.with_suffix(".json.corrupt")
+            path.rename(bak)
+            print(f"  ! {path.name} unparseable; preserved as {bak.name}")
+            history = []
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1, default=str) + "\n")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger kernel sweeps / serving runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"quick CI subset: {', '.join(SMOKE_SECTIONS)}")
     args = ap.parse_args(argv)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     from benchmarks import fig7, kernel_bench, roofline_table, serving_bench, \
         table1, table2
 
+    sections = [("table1_design_params", table1.run),
+                ("table2_kernel_results", table2.run),
+                ("fig7_partitioning", fig7.run),
+                ("roofline_40cells", roofline_table.run),
+                ("kernel_bench", kernel_bench.run),
+                ("conv", kernel_bench.run_conv),
+                ("serving_bench", serving_bench.run)]
+    if args.smoke:
+        sections = [s for s in sections if s[0] in SMOKE_SECTIONS]
+
     t0 = time.time()
+    sha = _git_sha()
     results = {}
-    for name, mod in [("table1_design_params", table1),
-                      ("table2_kernel_results", table2),
-                      ("fig7_partitioning", fig7),
-                      ("roofline_40cells", roofline_table),
-                      ("kernel_bench", kernel_bench),
-                      ("serving_bench", serving_bench)]:
+    for name, fn in sections:
         t = time.time()
         print(f"\n=== {name} ===", flush=True)
-        res = mod.run(full=args.full)
+        res = fn(full=args.full)
         results[name] = res
         (OUT_DIR / f"{name}.json").write_text(
             json.dumps(res, indent=1, default=str))
+        _append_trajectory(name, {
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "git": sha,
+            "full": args.full, "smoke": args.smoke, "result": res})
         print(f"[{name}: {time.time() - t:.1f}s]", flush=True)
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s; "
-          f"artifacts in {OUT_DIR}")
+          f"artifacts in {OUT_DIR} + BENCH_<name>.json trajectories")
 
 
 if __name__ == "__main__":

@@ -65,7 +65,7 @@ def main():
     params = resnet.init(jax.random.PRNGKey(0), cfg)
 
     def presparsify(p):
-        if isinstance(p, nn.Param) and p.kind == "linear" and p.value.ndim == 2:
+        if isinstance(p, nn.Param) and nn.compilable(p.kind) and p.value.ndim == 2:
             from repro.core.compiled_linear import balanced_prune_codes
             keep = max(8, int(p.value.shape[0] * 0.2) // 8 * 8)
             qt = balanced_prune_codes(p.value.astype(jnp.float32), keep)
@@ -78,15 +78,23 @@ def main():
                                  is_leaf=lambda x: isinstance(x, nn.Param))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, args.hw, args.hw, 3))
     ref = resnet.apply(nn.unbox(sparse_params), x, cfg)
-    compiled = nn.unbox(compile_params(sparse_params, mode="sparse_cfmm",
-                                       sparsity=0.8))
-    out = resnet.apply(compiled, x, cfg)
-    top1_match = float(jnp.mean((jnp.argmax(out, -1) ==
-                                 jnp.argmax(ref, -1)).astype(jnp.float32)))
-    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
-    print(f" compilation (INT7) error on the sparse model: logits rel err "
-          f"{rel:.4f}; top-1 agreement {top1_match:.0%} "
-          f"(paper: 0.22% top-1 delta)")
+    # every serving mode runs the fused implicit-GEMM conv pipeline; all
+    # must land within quantization tolerance of the dense (pre-refactor
+    # baseline) path on the same sparse weights
+    from repro.core.compiled_linear import SERVE_MODES
+    for mode in SERVE_MODES:
+        if mode == "dense":
+            continue
+        compiled = nn.unbox(compile_params(sparse_params, mode=mode,
+                                           sparsity=0.8))
+        out = resnet.apply(compiled, x, cfg)
+        top1_match = float(jnp.mean((jnp.argmax(out, -1) ==
+                                     jnp.argmax(ref, -1)).astype(jnp.float32)))
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        print(f" {mode:12s} compilation (INT7) error on the sparse model: "
+              f"logits rel err {rel:.4f}; top-1 agreement {top1_match:.0%} "
+              f"(paper: 0.22% top-1 delta)")
+        assert rel < 0.15, (mode, rel)
     print("compile_resnet50 OK")
 
 

@@ -31,6 +31,8 @@ balance but a static-shape accelerator buffer does.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -41,7 +43,7 @@ from repro.core.quantize import INT8_ACT_MAX, quantize_int7
 SERVE_MODES = ("dense", "int8", "cfmm", "sparse_cfmm", "bitserial")
 
 
-def _act_quant(x: jax.Array):
+def act_quant(x: jax.Array):
     """Dynamic per-tensor INT8 activation quantization (the Collector
     saturates/rounds activations to 8 bits, paper SS II-D.4)."""
     amax = jnp.max(jnp.abs(x))
@@ -49,6 +51,28 @@ def _act_quant(x: jax.Array):
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
                  -INT8_ACT_MAX, INT8_ACT_MAX).astype(jnp.int8)
     return q, scale
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ConvGeom:
+    """Static (k, stride, c_in) geometry riding a compiled conv weight.
+
+    A childless pytree node: it passes through nn.unbox / tree.map /
+    eval_shape untouched, so compiled conv leaves stay self-describing —
+    consumers never re-plumb filter size or stride alongside the weight.
+    """
+
+    k: int
+    stride: int
+    c_in: int
+
+    def tree_flatten(self):
+        return (), (self.k, self.stride, self.c_in)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux)
 
 
 # ---------------------------------------------------------------------------
@@ -110,11 +134,16 @@ def dense_of(w, dtype=jnp.float32) -> jax.Array:
         w = w.value
     if not isinstance(w, dict):
         return w.astype(dtype)
+    return packed_codes(w).astype(dtype) * w["scale"].astype(dtype)
+
+
+def packed_codes(w: dict) -> jax.Array:
+    """Dense int8 codes of any packed weight leaf (bitmap forms expand —
+    the jnp analogue of the in-VMEM expansion the sparse kernel does).
+    The single source of truth for the per-mode storage keys."""
     if "bitmap" in w:
-        codes = bitmap_unpack(w["bitmap"], w["values"])
-        return codes.astype(dtype) * w["scale"].astype(dtype)
-    codes = w.get("codes", w.get("bs_codes", w.get("values")))
-    return codes.astype(dtype) * w["scale"].astype(dtype)
+        return bitmap_unpack(w["bitmap"], w["values"])
+    return w.get("codes", w.get("bs_codes", w.get("values")))
 
 
 def _flatten_batch(x: jax.Array):
@@ -140,7 +169,7 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
         return jnp.matmul(x, wv.astype(x.dtype))
 
     x2, lead = _flatten_batch(x)
-    x_q, s_x = _act_quant(x2)
+    x_q, s_x = act_quant(x2)
     if "bitmap" in w:                              # sparse_cfmm
         from repro.kernels import ops
         acc = ops.sparse_cfmm_matmul(x_q, w["bitmap"], w["values"])
@@ -155,6 +184,35 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
 
 
+def conv_codes_of(w: dict):
+    """Dense int8 codes + per-channel scale of any compiled conv leaf.
+
+    The bitmap-packed form expands in VMEM on the accelerator (the Pallas
+    sparse kernel); here the expansion happens at the op boundary so every
+    serving mode feeds the same implicit-GEMM conv kernel.  ``bs_codes``
+    (bit-serial ablation) are bit-exact equal to plain codes as int8
+    operands, so they ride the MXU path too — the bit-plane loop remains a
+    linear-layer-only ablation.
+    """
+    return packed_codes(w), w["scale"]
+
+
+def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
+               shortcut=None, relu: bool = True, quant_out: bool = False):
+    """Fused conv forward for a compiled conv leaf (carries its geometry).
+
+    x_q (N, H, W, c_in) int8 + its scalar scale; gamma/beta are the
+    folded-BN scale and bias Collector vectors.  Returns f32 NHWC, or
+    (int8, scale) with quant_out (see kernels.ops.conv2d).
+    """
+    geom = w["geom"]
+    codes, w_scale = conv_codes_of(w)
+    from repro.kernels import ops
+    return ops.conv2d(x_q, codes, geom.k, geom.stride, x_scale=x_scale,
+                      w_scale=w_scale, gamma=gamma, beta=beta,
+                      shortcut=shortcut, relu=relu, quant_out=quant_out)
+
+
 # ---------------------------------------------------------------------------
 # Compilation (training tree -> constant-parameter serving tree)
 # ---------------------------------------------------------------------------
@@ -166,8 +224,13 @@ def _compile_leaf(p: nn.Param, mode: str, sparsity: float):
     for _ in range(w.ndim - 2):                    # stacked (layers/experts)
         fn = jax.vmap(fn)
     out = fn(w)
-    return {k: nn.Param(v, _leaf_axes(k, lead, in_ax, out_ax))
-            for k, v in out.items()}
+    packed = {k: nn.Param(v, _leaf_axes(k, lead, in_ax, out_ax))
+              for k, v in out.items()}
+    geom = nn.conv_geom_of(p.kind)
+    if geom is not None:                           # conv weights stay
+        k, stride = geom                           # self-describing
+        packed["geom"] = ConvGeom(k, stride, w.shape[-2] // (k * k))
+    return packed
 
 
 def _leaf_axes(kind: str, lead, in_ax, out_ax):
@@ -198,16 +261,19 @@ def _compile_leaf_2d(w: jax.Array, mode: str, sparsity: float) -> dict:
 def compile_params(params, mode: str = "sparse_cfmm", sparsity: float = 0.8):
     """Convert a trained param tree to its Compiled-NN serving form.
 
-    Only kind='linear' leaves are packed; norms, embeddings, biases and
-    routers stay in their training dtype.  Traceable — safe under
-    jax.eval_shape for the dry run.
+    Only linear- and conv-kind leaves are packed; norms, embeddings, biases
+    and routers stay in their training dtype.  Compiled conv leaves gain a
+    static ``geom`` (k, stride, c_in) entry so the serving path needs no
+    side-channel geometry.  Traceable — safe under jax.eval_shape for the
+    dry run.
     """
     assert mode in SERVE_MODES, mode
     if mode == "dense":
         return params
 
     def visit(p):
-        if isinstance(p, nn.Param) and p.kind == "linear" and p.value.ndim >= 2:
+        if isinstance(p, nn.Param) and nn.compilable(p.kind) \
+                and p.value.ndim >= 2:
             return _compile_leaf(p, mode, sparsity)
         return p
 

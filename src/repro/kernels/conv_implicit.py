@@ -1,0 +1,123 @@
+"""Implicit-GEMM fused convolution — Pallas TPU kernel (DESIGN.md §3).
+
+The paper's Fig 1 Kernel + Non-Kernel decomposition as ONE kernel launch
+per conv layer: the Kernel is the int8 x int7 MACs, the Non-Kernel
+(Collector) — per-channel dequant, folded-BN scale, bias, shortcut add,
+ReLU, and the output-amax needed to round activations back to 8 bits — is
+fused into the epilogue.  The im2col patch tensor is never materialized
+in HBM: each grid cell holds one (padded) input image in VMEM and forms
+the k*k receptive-field taps *implicitly* as strided slices, issuing one
+MXU matmul per tap:
+
+    out[oh, ow, :] += x[oh*s + dy, ow*s + dx, :] @ w[dy, dx, :, :]
+
+so HBM activation traffic is 1 byte/input-pixel instead of the 4*k*k
+bytes/pixel of a materialized f32 patch tensor + separate-epilogue chain.
+
+Grid: (N, C_out/bn).  Weights arrive in spatial-major layout
+(k*k*c_in, c_out) so each tap's (c_in, bn) slab is a contiguous slice.
+The whole padded image lives in VMEM per grid cell — right-sized for the
+paper's ResNet50 feature maps (conv2_x at 56x56x256 int8 is ~0.8 MB;
+the 224x224 stem has c_in=3).  Row-strip tiling for larger images is an
+open item in ROADMAP.md.
+
+Outputs: f32 (N, m_pad, C_out) conv result plus a per-(image, channel
+tile) amax — max|y| reduced on-chip so the caller can requantize to int8
+without re-reading the f32 output (the quantization-domain pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut):
+    if has_shortcut:
+        x_ref, w_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
+    else:
+        x_ref, w_ref, s_ref, b_ref, out_ref, amax_ref = refs
+        sc_ref = None
+    x = x_ref[0]                                   # (Hp, Wp, C) int8, VMEM
+    C = x.shape[-1]
+    m_out = h_out * w_out
+    acc = jnp.zeros((m_out, w_ref.shape[1]), jnp.int32)
+    # implicit im2col: one strided VMEM slice + MXU matmul per tap, the
+    # k*k loop unrolls at trace time (taps are static)
+    for dy in range(k):
+        for dx in range(k):
+            sl = jax.lax.slice(
+                x, (dy, dx, 0),
+                (dy + (h_out - 1) * stride + 1,
+                 dx + (w_out - 1) * stride + 1, C),
+                (stride, stride, 1)).reshape(m_out, C)
+            tap = dy * k + dx
+            acc += jax.lax.dot_general(
+                sl, w_ref[tap * C:(tap + 1) * C, :],
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    # fused Collector: dequant * BN-scale (one vector), bias, shortcut, ReLU
+    y = acc.astype(jnp.float32) * s_ref[...] + b_ref[...]
+    if sc_ref is not None:
+        y = y + sc_ref[0, :m_out, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    amax_ref[0, 0] = jnp.max(jnp.abs(y))
+    if m_pad > m_out:
+        y = jnp.pad(y, ((0, m_pad - m_out), (0, 0)))
+    out_ref[0] = y
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "stride", "h_out", "w_out", "bn", "relu", "interpret"))
+def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
+                           eff_scale: jax.Array, eff_bias: jax.Array,
+                           shortcut: jax.Array | None = None, *,
+                           k: int, stride: int, h_out: int, w_out: int,
+                           bn: int = 128, relu: bool = True,
+                           interpret: bool = False):
+    """Fused implicit-GEMM conv.
+
+    x_pad:     (N, Hp, Wp, C) int8, already SAME-padded (ref.pad_same_nhwc)
+    w_sp:      (k*k*C, n_out) int8, spatial-major tap layout
+    eff_scale: (1, n_out) f32 = s_x * w_scale * bn_scale (whole dequant+BN)
+    eff_bias:  (1, n_out) f32
+    shortcut:  optional (N, m_pad, n_out) f32, m_pad = h_out*w_out rounded
+               up to a sublane multiple
+    Returns (y, amax): y f32 (N, m_pad, n_out); amax f32 (N, n_out/bn)
+    per-(image, channel-tile) max|y| for the int8 requantization pass.
+    """
+    N, Hp, Wp, C = x_pad.shape
+    KK, n_out = w_sp.shape
+    assert KK == k * k * C and n_out % bn == 0, ((KK, k, C), (n_out, bn))
+    assert Hp >= (h_out - 1) * stride + k and Wp >= (w_out - 1) * stride + k
+    m_out = h_out * w_out
+    m_pad = -(-m_out // 8) * 8
+    n_j = n_out // bn
+    kern = functools.partial(_kernel, k=k, stride=stride, h_out=h_out,
+                             w_out=w_out, m_pad=m_pad, relu=relu,
+                             has_shortcut=shortcut is not None)
+    in_specs = [
+        pl.BlockSpec((1, Hp, Wp, C), lambda n, j: (n, 0, 0, 0)),
+        pl.BlockSpec((KK, bn), lambda n, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
+    ]
+    args = [x_pad, w_sp, eff_scale, eff_bias]
+    if shortcut is not None:
+        assert shortcut.shape == (N, m_pad, n_out), shortcut.shape
+        in_specs.append(pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)))
+        args.append(shortcut.astype(jnp.float32))
+    y, amax = pl.pallas_call(
+        kern,
+        grid=(N, n_j),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)),
+                   pl.BlockSpec((1, 1), lambda n, j: (n, j))],
+        out_shape=[jax.ShapeDtypeStruct((N, m_pad, n_out), jnp.float32),
+                   jax.ShapeDtypeStruct((N, n_j), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return y, amax

@@ -130,6 +130,65 @@ def block_sparse_matmul(x: jax.Array, w: jax.Array,
     return jnp.where(jnp.asarray(col_has_work)[None, :], out, 0)
 
 
+def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
+           x_scale, w_scale: jax.Array, gamma: jax.Array | None = None,
+           beta: jax.Array | None = None, shortcut: jax.Array | None = None,
+           relu: bool = True, quant_out: bool = False):
+    """Fused implicit-GEMM int8 SAME conv + Collector epilogue.
+
+    x_q:     (N, H, W, c_in) int8 activations, x_scale their scalar scale
+    codes:   (c_in*k*k, c_out) int8 constant weight codes in patch
+             (channel-major) order — the layout ``compile_params`` stores
+    w_scale: per-output-channel dequant scale, broadcastable to (c_out,)
+    gamma/beta: folded-BN scale and bias (the Non-Kernel Collector ops)
+    shortcut:   optional f32 (N, h_out, w_out, c_out) residual to add
+    quant_out:  round the output back to int8 (paper: "saturated and
+                rounded to 8 bits") -> returns (y_q int8, y_scale);
+                otherwise returns f32 (N, h_out, w_out, c_out).
+
+    Lowering follows REPRO_PALLAS like every op here: the jnp reference on
+    CPU, the Pallas implicit-GEMM kernel on TPU / in interpret mode.
+    """
+    mode = _mode()
+    N, H, W, C = x_q.shape
+    n_out = codes.shape[1]
+    assert codes.shape[0] == C * k * k, (codes.shape, C, k)
+    one = jnp.ones((n_out,), jnp.float32)
+    eff_scale = (jnp.asarray(x_scale, jnp.float32)
+                 * w_scale.reshape(-1).astype(jnp.float32)
+                 * (one if gamma is None else gamma.astype(jnp.float32)))
+    eff_bias = (jnp.zeros((n_out,), jnp.float32) if beta is None
+                else beta.astype(jnp.float32))
+    if mode == "jnp":
+        y = ref.conv2d_collector_ref(x_q, codes, k, stride, eff_scale,
+                                     eff_bias, shortcut, relu)
+        amax_of = lambda: jnp.max(jnp.abs(y))
+    else:
+        from repro.kernels.conv_implicit import conv2d_implicit_pallas
+        xp, h_out, w_out = ref.pad_same_nhwc(x_q, k, stride)
+        m_out, m_pad = h_out * w_out, -(-h_out * w_out // 8) * 8
+        bn = 128 if n_out % 128 == 0 else _largest_tile(n_out, 128)
+        w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
+        sc = None
+        if shortcut is not None:
+            sc = shortcut.astype(jnp.float32).reshape(N, m_out, n_out)
+            sc = jnp.pad(sc, ((0, 0), (0, m_pad - m_out), (0, 0)))
+        y_flat, _amax = conv2d_implicit_pallas(
+            xp, w_sp.reshape(k * k * C, n_out),
+            eff_scale.reshape(1, n_out), eff_bias.reshape(1, n_out), sc,
+            k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
+            relu=relu, interpret=(mode == "interpret"))
+        y = y_flat[:, :m_out, :].reshape(N, h_out, w_out, n_out)
+        amax_of = lambda: jnp.max(_amax)   # reduced on-chip in the epilogue
+    if not quant_out:
+        return y
+    # quantization-domain pass: activations go straight back to int8 so
+    # the next conv consumes codes without an f32 HBM round-trip
+    s_y = (jnp.maximum(amax_of(), 1e-12) / 127.0).astype(jnp.float32)
+    y_q = jnp.clip(jnp.round(y / s_y), -127, 127).astype(jnp.int8)
+    return y_q, s_y
+
+
 def flash_attention(q, k, v, causal=True, window=None):
     """GQA-native flash attention: Pallas on TPU, jnp chunked elsewhere.
 

@@ -60,6 +60,93 @@ def block_sparse_matmul_ref(x: jax.Array, w_blocks: jax.Array,
     return x @ w
 
 
+# ---------------------------------------------------------------------------
+# Convolution (implicit-GEMM oracle + the materializing im2col baseline)
+# ---------------------------------------------------------------------------
+
+def same_pads(size: int, k: int, stride: int):
+    """SAME-padding (lo, hi) and output size along one spatial dim."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2, out
+
+
+def pad_same_nhwc(x: jax.Array, k: int, stride: int):
+    """Zero-pad (N,H,W,C) for SAME conv -> (padded, h_out, w_out).
+
+    Zero padding is exact for symmetric int8 codes (zero point is 0).
+    """
+    _, H, W, _ = x.shape
+    lo_h, hi_h, h_out = same_pads(H, k, stride)
+    lo_w, hi_w, w_out = same_pads(W, k, stride)
+    if lo_h or hi_h or lo_w or hi_w:
+        x = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    return x, h_out, w_out
+
+
+def _shift_slice(xp: jax.Array, dy: int, dx: int, h_out: int, w_out: int,
+                 stride: int) -> jax.Array:
+    """The (dy, dx) tap of the receptive field, strided to output positions."""
+    return jax.lax.slice(
+        xp, (0, dy, dx, 0),
+        (xp.shape[0], dy + (h_out - 1) * stride + 1,
+         dx + (w_out - 1) * stride + 1, xp.shape[3]),
+        (1, stride, stride, 1))
+
+
+def im2col_ref(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """Materialized SAME im2col patches, (N, h_out, w_out, C*k*k).
+
+    Feature ordering is channel-major (c*k*k + ky*k + kx) — bit-identical
+    to ``lax.conv_general_dilated_patches`` with NHWC dimension numbers,
+    so flat (c_in*k*k, c_out) weights mean the same thing on both paths.
+    This is the HBM-materializing baseline the implicit-GEMM kernel beats.
+    """
+    xp, h_out, w_out = pad_same_nhwc(x, k, stride)
+    taps = [_shift_slice(xp, dy, dx, h_out, w_out, stride)
+            for dy in range(k) for dx in range(k)]
+    p = jnp.stack(taps, axis=-1)                    # (N, ho, wo, C, k*k)
+    N, _, _, C = x.shape
+    return p.reshape(N, h_out, w_out, C * k * k)
+
+
+def conv2d_int8_ref(x_q: jax.Array, codes: jax.Array, k: int,
+                    stride: int) -> jax.Array:
+    """int8 NHWC conv -> int32 (exact): shift-slice matmuls, no im2col.
+
+    codes: (c_in*k*k, c_out) int8 in patch (channel-major) order.
+    """
+    N, _, _, C = x_q.shape
+    n_out = codes.shape[1]
+    xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
+    # spatial-major weight view: tap (dy, dx) -> contiguous (C, n_out) slab
+    w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
+    acc = jnp.zeros((N, h_out, w_out, n_out), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            sl = _shift_slice(xp, dy, dx, h_out, w_out, stride)
+            acc = acc + jax.lax.dot_general(
+                sl, w_sp[dy, dx], dimension_numbers=(((3,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    return acc
+
+
+def conv2d_collector_ref(x_q: jax.Array, codes: jax.Array, k: int,
+                         stride: int, eff_scale: jax.Array,
+                         eff_bias: jax.Array, shortcut=None,
+                         relu: bool = True) -> jax.Array:
+    """Fused conv + Collector oracle: dequant/BN scale, bias, shortcut, ReLU.
+
+    eff_scale = s_x * w_scale * bn_scale and eff_bias = bias, both (c_out,)
+    broadcastable — the whole Non-Kernel epilogue as two vectors.
+    """
+    acc = conv2d_int8_ref(x_q, codes, k, stride)
+    y = acc.astype(jnp.float32) * eff_scale + eff_bias
+    if shortcut is not None:
+        y = y + shortcut.astype(jnp.float32)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
 def flash_attention_ref(q, k, v, causal=True, window=None):
     """Naive softmax attention oracle for the chunked/flash paths.
 

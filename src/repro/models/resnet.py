@@ -1,11 +1,22 @@
 """ResNet50 — the paper's own network, as a Compiled NN in JAX.
 
 Residual blocks follow the paper's Fig 1 decomposition: the Kernel is the
-convolution MACs (routed through core.compiled_linear via im2col, so the
-CFMM / sparse-packed paths apply), and the Non-Kernel is everything else —
-bias add, per-channel scaling (folded BatchNorm), ReLU, rounding to 8 bits,
-and the shortcut add (the last Collector in each block adds the shortcut,
+convolution MACs and the Non-Kernel is everything else — bias add,
+per-channel scaling (folded BatchNorm), ReLU, rounding to 8 bits, and the
+shortcut add (the last Collector in each block adds the shortcut,
 SS II-D.4).
+
+Two forward paths (DESIGN.md §4):
+
+* **dense** (training / pre-refactor baseline): im2col patches through
+  ``apply_linear`` with separate XLA Collector ops — kept verbatim as the
+  reference the compiled path is validated against.
+* **compiled**: weights are constant int8 codes carrying their (k, stride,
+  c_in) geometry; each conv is ONE fused implicit-GEMM launch
+  (``compiled_linear.apply_conv``) with the whole Collector in the
+  epilogue, and residual blocks run a quantization-domain pass — one
+  ``act_quant`` at block entry, then activations stay int8 between the
+  a/b/c convs instead of per-conv f32 requant round-trips.
 
 Inference-focused (the paper compiles post-training parameters); a width
 multiplier supports reduced smoke configs.
@@ -18,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
-from repro.core.compiled_linear import apply_linear
+from repro.core.compiled_linear import act_quant, apply_conv, apply_linear
 from repro.core.fpga_model import ConvLayerSpec
 
 # (blocks, mid_channels, out_channels, feature hw) per stage — Table I.
@@ -81,17 +92,19 @@ def resnet50_conv_blocks() -> list[list[ConvLayerSpec]]:
 # Functional model
 # ---------------------------------------------------------------------------
 
-def _conv_init(key, c_in, c_out, k):
+def _conv_init(key, c_in, c_out, k, stride=1):
     return {
-        "w": nn.linear_param(key, c_in * k * k, c_out,
-                             ("conv_in", "conv_out")),
+        "w": nn.conv_param(key, c_in, c_out, k, stride,
+                           ("conv_in", "conv_out")),
         "scale": nn.param(key, (c_out,), ("conv_out",), init="ones"),
         "bias": nn.param(key, (c_out,), ("conv_out",), init="zeros"),
     }
 
 
 def _conv_apply(p, x, k, stride=1, relu=True, shortcut=None):
-    """im2col conv + NK collector ops (bias, scale/BN, shortcut, ReLU)."""
+    """Dense path: im2col conv + separate NK collector ops (bias, scale/BN,
+    shortcut, ReLU).  This is the pre-refactor baseline the fused compiled
+    path is validated against."""
     if k > 1:
         patches = jax.lax.conv_general_dilated_patches(
             x, (k, k), (stride, stride), "SAME",
@@ -105,21 +118,36 @@ def _conv_apply(p, x, k, stride=1, relu=True, shortcut=None):
     return jax.nn.relu(y) if relu else y
 
 
+def _conv_q(p, x_q, s_x, **kw):
+    """Compiled path: one fused implicit-GEMM launch; geometry rides the
+    weight, the Collector (scale/BN, bias, shortcut, ReLU, 8-bit rounding)
+    rides the kernel epilogue."""
+    return apply_conv(p["w"], x_q, s_x, gamma=p["scale"], beta=p["bias"],
+                      **kw)
+
+
+def _block_stride(name: str, b: int) -> int:
+    return 2 if (b == 0 and name != "conv2_x") else 1
+
+
 def init(key, cfg: ResNetConfig):
     keys = iter(jax.random.split(key, 64))
-    params = {"stem": _conv_init(next(keys), 3, max(8, int(64 * cfg.width_mult)), 7)}
+    params = {"stem": _conv_init(next(keys), 3, max(8, int(64 * cfg.width_mult)),
+                                 7, stride=2)}
     in_ch = max(8, int(64 * cfg.width_mult))
     for i in range(4):
         name, n_blocks, mid, out, hw = cfg.stage(i)
         stage = []
         for b in range(n_blocks):
+            stride = _block_stride(name, b)
             blk = {
-                "a": _conv_init(next(keys), in_ch, mid, 1),
+                "a": _conv_init(next(keys), in_ch, mid, 1, stride=stride),
                 "b": _conv_init(next(keys), mid, mid, 3),
                 "c": _conv_init(next(keys), mid, out, 1),
             }
             if b == 0:
-                blk["sc"] = _conv_init(next(keys), in_ch, out, 1)
+                blk["sc"] = _conv_init(next(keys), in_ch, out, 1,
+                                       stride=stride)
             stage.append(blk)
             in_ch = out
         params[name] = stage
@@ -128,15 +156,40 @@ def init(key, cfg: ResNetConfig):
     return params
 
 
+def _apply_compiled(params, x, cfg: ResNetConfig):
+    """Compiled serving path: fused implicit-GEMM convs + the quantization-
+    domain pass — activations are quantized once per residual block and
+    stay int8 between the a/b/c convs (conv a and b requantize in their
+    epilogue; conv c returns f32 for the shortcut Collector and pooling).
+    """
+    x_q, s = act_quant(x)
+    h = _conv_q(params["stem"], x_q, s, relu=True)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for i in range(4):
+        name, _, _, _, _ = cfg.stage(i)
+        for blk in params[name]:
+            h_q, s_h = act_quant(h)                # one quant per block
+            sc = (_conv_q(blk["sc"], h_q, s_h, relu=False)
+                  if "sc" in blk else h)
+            a_q, s_a = _conv_q(blk["a"], h_q, s_h, quant_out=True)
+            b_q, s_b = _conv_q(blk["b"], a_q, s_a, quant_out=True)
+            h = _conv_q(blk["c"], b_q, s_b, shortcut=sc, relu=True)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return apply_linear(params["head"]["w"], pooled)
+
+
 def apply(params, x, cfg: ResNetConfig):
     """x: (B, H, W, 3) -> logits (B, num_classes)."""
+    if isinstance(params["stem"]["w"], dict):      # compiled constant params
+        return _apply_compiled(params, x, cfg)
     h = _conv_apply(params["stem"], x, 7, stride=2)
     h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
     for i in range(4):
         name, n_blocks, mid, out, hw = cfg.stage(i)
         for b, blk in enumerate(params[name]):
-            stride = 2 if (b == 0 and name != "conv2_x") else 1
+            stride = _block_stride(name, b)
             sc = (_conv_apply(blk["sc"], h, 1, stride, relu=False)
                   if "sc" in blk else h)
             y = _conv_apply(blk["a"], h, 1, stride)

@@ -70,6 +70,35 @@ def linear_param(key, d_in, d_out, axes, dtype=jnp.float32, scale=None):
     return param(key, (d_in, d_out), axes, dtype, "normal", scale, kind="linear")
 
 
+def conv_kind(k: int, stride: int) -> str:
+    """Param kind for a conv weight — the (k, stride) geometry rides the
+    kind string so it survives flatten/unflatten, Axes boxing, and
+    checkpointing without changing the Param aux structure."""
+    return f"conv{k}s{stride}"
+
+
+def conv_geom_of(kind) -> tuple | None:
+    """(k, stride) of a conv kind, or None for non-conv kinds."""
+    if isinstance(kind, str) and kind.startswith("conv"):
+        ks, _, ss = kind[4:].partition("s")
+        if ks.isdigit() and ss.isdigit():
+            return int(ks), int(ss)
+    return None
+
+
+def compilable(kind) -> bool:
+    """Kinds eligible for constant-parameter compilation."""
+    return kind == "linear" or conv_geom_of(kind) is not None
+
+
+def conv_param(key, c_in, c_out, k, stride, axes, dtype=jnp.float32,
+               scale=None):
+    """A conv weight, stored flat (c_in*k*k, c_out) in im2col patch order
+    (channel-major), carrying its (k, stride) geometry in the kind."""
+    return param(key, (c_in * k * k, c_out), axes, dtype, "normal", scale,
+                 kind=conv_kind(k, stride))
+
+
 def unbox(tree: PyTree) -> PyTree:
     """Strip Param boxes -> raw array pytree (used inside jitted steps)."""
     return jax.tree.map(lambda p: p.value, tree, is_leaf=lambda x: isinstance(x, Param))

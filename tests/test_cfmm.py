@@ -1,7 +1,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import cfmm
 from repro.core.quantize import quantize_int7

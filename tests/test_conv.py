@@ -1,0 +1,229 @@
+"""Implicit-GEMM conv pipeline: kernel bit-exactness (interpret mode) vs
+the jnp oracle vs lax.conv_general_dilated, every serving mode, the fused
+Collector epilogue, the quantization-domain pass, and the compiled ResNet
+path against the pre-refactor dense baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.core.quantize import quantize_int7
+from repro.kernels import ops, ref
+
+# k/stride sweep including the odd-spatial 7x7 conv5_x corner (Table I)
+GEOMS = [(1, 1), (1, 2), (3, 1), (3, 2), (7, 1), (7, 2)]
+SIZES = [(8, 8), (7, 9)]
+
+
+def _conv_inputs(k, H, W, C=8, n_out=16, seed=0):
+    key = jax.random.PRNGKey(seed + 13 * k + H)
+    x = jax.random.randint(key, (2, H, W, C), -127, 128, jnp.int8)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (C * k * k, n_out)) * 0.1
+    return x, quantize_int7(w)
+
+
+@pytest.mark.parametrize("k,stride", [(3, 1), (3, 2), (7, 2)])
+@pytest.mark.parametrize("H,W", SIZES)
+def test_im2col_ref_matches_lax_patches(k, stride, H, W):
+    """The jnp im2col oracle reproduces conv_general_dilated_patches
+    bit-for-bit — the flat weight layout means the same thing on the dense
+    (pre-refactor) and implicit-GEMM paths."""
+    x, _ = _conv_inputs(k, H, W)
+    xf = x.astype(jnp.float32)
+    ours = ref.im2col_ref(xf, k, stride)
+    lax_p = jax.lax.conv_general_dilated_patches(
+        xf, (k, k), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_array_equal(np.asarray(ours), np.asarray(lax_p))
+
+
+@pytest.mark.parametrize("k,stride", GEOMS)
+@pytest.mark.parametrize("H,W", SIZES)
+def test_conv_int8_ref_exact(k, stride, H, W):
+    """Shift-slice int8 conv oracle == materialized-im2col int32 matmul."""
+    x, qt = _conv_inputs(k, H, W)
+    acc = ref.conv2d_int8_ref(x, qt.values, k, stride)
+    patches = ref.im2col_ref(x.astype(jnp.int32), k, stride)
+    want = jnp.einsum("nhwk,ko->nhwo", patches,
+                      qt.values.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(want))
+
+
+@pytest.mark.parametrize("k,stride", GEOMS)
+@pytest.mark.parametrize("H,W", SIZES)
+def test_conv_implicit_kernel_bit_exact(k, stride, H, W):
+    """Pallas implicit-GEMM kernel (interpret mode) == int8 oracle, exactly.
+
+    Accumulators stay below 2^24 so the f32 epilogue output represents the
+    int32 accumulator exactly with unit scale.
+    """
+    x, qt = _conv_inputs(k, H, W)
+    n_out = qt.values.shape[1]
+    y = ops.conv2d(x, qt.values, k, stride, x_scale=1.0,
+                   w_scale=jnp.ones((n_out,)), relu=False)
+    acc = ref.conv2d_int8_ref(x, qt.values, k, stride)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(acc).astype(np.float32))
+
+
+@pytest.mark.parametrize("k,stride", [(1, 1), (3, 1), (3, 2), (7, 2)])
+def test_conv_vs_lax_conv_general_dilated(k, stride):
+    """Against JAX's own convolution: dequantized implicit-GEMM conv equals
+    lax.conv_general_dilated on the dequantized operands."""
+    x, qt = _conv_inputs(k, 9, 7)
+    C, n_out = 8, qt.values.shape[1]
+    s_x = 0.05
+    y = ops.conv2d(x, qt.values, k, stride, x_scale=s_x,
+                   w_scale=qt.scale.reshape(-1), relu=False)
+    w_hwio = (qt.values.astype(jnp.float32) * qt.scale).reshape(
+        C, k, k, n_out).transpose(1, 2, 0, 3)
+    want = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32) * s_x, w_hwio, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_collector_epilogue_matches_separate_ops():
+    """scale/BN, bias, shortcut, ReLU fused in the epilogue == the
+    separate-XLA-ops sequence the pre-refactor path ran."""
+    k, stride = 3, 1
+    x, qt = _conv_inputs(k, 8, 8)
+    n_out = qt.values.shape[1]
+    key = jax.random.PRNGKey(5)
+    gamma = jax.random.normal(key, (n_out,))
+    beta = jax.random.normal(jax.random.fold_in(key, 1), (n_out,))
+    sc = jax.random.normal(jax.random.fold_in(key, 2), (2, 8, 8, n_out))
+    s_x = 0.03
+    y = ops.conv2d(x, qt.values, k, stride, x_scale=s_x,
+                   w_scale=qt.scale.reshape(-1), gamma=gamma, beta=beta,
+                   shortcut=sc, relu=True)
+    acc = ref.conv2d_int8_ref(x, qt.values, k, stride)
+    want = acc.astype(jnp.float32) * (s_x * qt.scale.reshape(1, -1))
+    want = want * gamma + beta + sc
+    want = jax.nn.relu(want)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_interpret_and_jnp_lowering_agree(monkeypatch):
+    """Both REPRO_PALLAS lowerings of the fused conv produce identical int8
+    codes under the quantization-domain pass."""
+    k, stride = 3, 2
+    x, qt = _conv_inputs(k, 9, 7)
+    n_out = qt.values.shape[1]
+    outs = {}
+    for mode in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", mode)
+        outs[mode] = ops.conv2d(x, qt.values, k, stride, x_scale=0.02,
+                                w_scale=qt.scale.reshape(-1),
+                                gamma=jnp.ones((n_out,)),
+                                beta=jnp.zeros((n_out,)), relu=True,
+                                quant_out=True)
+    np.testing.assert_array_equal(np.asarray(outs["jnp"][0]),
+                                  np.asarray(outs["interpret"][0]))
+    np.testing.assert_allclose(float(outs["jnp"][1]),
+                               float(outs["interpret"][1]), rtol=1e-6)
+
+
+def test_compiled_conv_carries_geometry():
+    """compile_params attaches a static (k, stride, c_in) geom that
+    survives nn.unbox and jax.tree operations."""
+    p = {"w": nn.conv_param(jax.random.PRNGKey(0), 8, 16, 3, 2,
+                            ("conv_in", "conv_out"))}
+    for mode in ("int8", "cfmm", "sparse_cfmm", "bitserial"):
+        packed = nn.unbox(cl.compile_params(p, mode=mode))
+        g = packed["w"]["geom"]
+        assert (g.k, g.stride, g.c_in) == (3, 2, 8)
+        # childless pytree node: flatten/unflatten round-trips, zero leaves
+        leaves, tree = jax.tree.flatten(g)
+        assert leaves == [] and jax.tree.unflatten(tree, []) == g
+
+
+@pytest.mark.parametrize("mode", [m for m in cl.SERVE_MODES if m != "dense"])
+def test_apply_conv_all_serve_modes(mode):
+    """Every serving mode routes through the implicit-GEMM kernel and lands
+    within quantization tolerance of the dense f32 conv."""
+    k, stride, C, n_out = 3, 1, 16, 32
+    key = jax.random.PRNGKey(2)
+    p = {"w": nn.conv_param(key, C, n_out, k, stride,
+                            ("conv_in", "conv_out"))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 8, C))
+    w_dense = nn.unbox(p)["w"]
+    w_hwio = w_dense.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
+    want = jax.lax.conv_general_dilated(
+        x, w_hwio, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    packed = nn.unbox(cl.compile_params(p, mode=mode, sparsity=0.5))
+    x_q, s_x = cl.act_quant(x)
+    y = cl.apply_conv(packed["w"], x_q, s_x, relu=False)
+    if mode == "sparse_cfmm":    # pruned weights: subspace only
+        codes = cl.bitmap_unpack(packed["w"]["bitmap"], packed["w"]["values"])
+        w_pruned = (codes.astype(jnp.float32) * packed["w"]["scale"]).reshape(
+            C, k, k, n_out).transpose(1, 2, 0, 3)
+        want = jax.lax.conv_general_dilated(
+            x, w_pruned, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    rel = float(jnp.linalg.norm(y - want) / jnp.linalg.norm(want))
+    assert rel < 0.05, (mode, rel)
+
+
+def test_int8_and_cfmm_conv_bit_identical():
+    k = 3
+    key = jax.random.PRNGKey(3)
+    p = {"w": nn.conv_param(key, 8, 16, k, 1, ("conv_in", "conv_out"))}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 7, 7, 8))
+    x_q, s_x = cl.act_quant(x)
+    ys = [cl.apply_conv(nn.unbox(cl.compile_params(p, mode=m))["w"],
+                        x_q, s_x, relu=True)
+          for m in ("int8", "cfmm")]
+    np.testing.assert_array_equal(np.asarray(ys[0]), np.asarray(ys[1]))
+
+
+def test_quant_out_roundtrip():
+    """quant_out emits int8 codes + scale whose dequantization matches the
+    f32 output to within half a quantization step."""
+    k, stride = 3, 1
+    x, qt = _conv_inputs(k, 8, 8)
+    n_out = qt.values.shape[1]
+    kw = dict(x_scale=0.02, w_scale=qt.scale.reshape(-1), relu=True)
+    y = ops.conv2d(x, qt.values, k, stride, **kw)
+    y_q, s_y = ops.conv2d(x, qt.values, k, stride, quant_out=True, **kw)
+    assert y_q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(y_q, np.float32) * float(s_y),
+                               np.asarray(y), atol=float(s_y) * 0.5 + 1e-7)
+
+
+def test_resnet_compiled_matches_dense_path(monkeypatch):
+    """End-to-end: the fused implicit-GEMM + quantization-domain ResNet
+    agrees with the pre-refactor dense path within quantization tolerance
+    (the paper's 0.22% top-1 delta analogue)."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")   # full model: fast lowering
+    from repro.models import resnet
+    cfg = resnet.ResNetConfig(width_mult=0.25, num_classes=10, in_hw=16)
+    params = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    want = resnet.apply(nn.unbox(params), x, cfg)
+    for mode in ("int8", "cfmm"):
+        compiled = nn.unbox(cl.compile_params(params, mode=mode))
+        out = resnet.apply(compiled, x, cfg)
+        rel = float(jnp.linalg.norm(out - want) / jnp.linalg.norm(want))
+        assert rel < 0.15, (mode, rel)
+        agree = jnp.mean((jnp.argmax(out, -1) ==
+                          jnp.argmax(want, -1)).astype(jnp.float32))
+        assert float(agree) == 1.0
+
+
+def test_resnet_compiled_interpret_mode_small():
+    """The compiled ResNet block structure also runs through the Pallas
+    kernel in interpret mode (tiny config — interpret is slow)."""
+    from repro.models import resnet
+    cfg = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+    params = resnet.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    compiled = nn.unbox(cl.compile_params(params, mode="int8"))
+    out = resnet.apply(compiled, x, cfg)
+    assert out.shape == (1, 4)
+    assert bool(jnp.isfinite(out).all())
