@@ -19,7 +19,7 @@ import time
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT_DIR = ROOT / "experiments" / "bench"
 
-SMOKE_SECTIONS = ("table1_design_params", "conv")
+SMOKE_SECTIONS = ("table1_design_params", "conv", "sparse_conv")
 
 
 def _git_sha() -> str:
@@ -66,6 +66,7 @@ def main(argv=None) -> None:
                 ("roofline_40cells", roofline_table.run),
                 ("kernel_bench", kernel_bench.run),
                 ("conv", kernel_bench.run_conv),
+                ("sparse_conv", kernel_bench.run_sparse_conv),
                 ("serving_bench", serving_bench.run)]
     if args.smoke:
         sections = [s for s in sections if s[0] in SMOKE_SECTIONS]

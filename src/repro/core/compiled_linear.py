@@ -14,7 +14,11 @@ per serving compilation mode:
   sparse_cfmm  {'bitmap': uint8, 'values': int8, 'scale'}
                bitmap-packed constant sparsity: (1-s)*8 + 1 bits/param
                (~2.6 bits at s=0.8 vs 16 for bf16) — the paper's
-               zero-overhead sparsity converted to a memory-bandwidth win
+               zero-overhead sparsity converted to a memory-bandwidth win.
+               K pads up to a multiple of 8 with masked all-zero rows;
+               conv leaves pack in the sparse conv kernel's spatial-major
+               tap layout (kernels/conv_sparse.py) so serving streams the
+               packed bytes straight into VMEM
   bitserial    {'codes': int8, 'scale'}, bit-plane matmul — FPGA bit-serial
                ablation (sum_b 2^b * (x @ ternary plane_b))
 
@@ -39,6 +43,7 @@ import jax.numpy as jnp
 from repro import nn
 from repro.core import cfmm
 from repro.core.quantize import INT8_ACT_MAX, quantize_int7
+from repro.kernels.bitmap import expand_bitmap_tile
 
 SERVE_MODES = ("dense", "int8", "cfmm", "sparse_cfmm", "bitserial")
 
@@ -69,6 +74,28 @@ class ConvGeom:
 
     def tree_flatten(self):
         return (), (self.k, self.stride, self.c_in)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KDim:
+    """Static unpadded-K marker riding an off-%8 *linear* bitmap leaf.
+
+    The pad_rows8 rule stores such leaves with ceil(K/8)*8 rows; this
+    childless pytree node (same pattern as ConvGeom) records the original
+    K so ``packed_codes``/``dense_of`` keep their shape contract for
+    algebraic consumers.  Conv leaves need no marker — their ``geom``
+    already determines K = k*k*c_in.
+    """
+
+    k: int
+
+    def tree_flatten(self):
+        return (), (self.k,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -108,15 +135,11 @@ def bitmap_pack(codes: jax.Array, keep_k: int):
 
 
 def bitmap_unpack(bitmap: jax.Array, values: jax.Array) -> jax.Array:
-    """Inverse of bitmap_pack -> dense int8 codes (K, N).  This is the jnp
-    lowering of the in-VMEM expansion the Pallas sparse kernel performs."""
-    Kb, N = bitmap.shape
-    keep_k = values.shape[0]
-    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
-    mask = ((bitmap[:, None, :] >> shifts) & 1).reshape(Kb * 8, N).astype(bool)
-    pos = jnp.clip(jnp.cumsum(mask, axis=0) - 1, 0, keep_k - 1)
-    gathered = jnp.take_along_axis(values, pos, axis=0)
-    return jnp.where(mask, gathered, jnp.int8(0))
+    """Inverse of bitmap_pack -> dense int8 codes (K, N): one full-slab
+    call of the kernels' shared expand tile (kernels/bitmap.py) — the
+    format decode lives in exactly one place."""
+    base = jnp.zeros((1, bitmap.shape[1]), jnp.int32)
+    return expand_bitmap_tile(bitmap, values, base, values.shape[0])[0]
 
 
 # ---------------------------------------------------------------------------
@@ -140,9 +163,25 @@ def dense_of(w, dtype=jnp.float32) -> jax.Array:
 def packed_codes(w: dict) -> jax.Array:
     """Dense int8 codes of any packed weight leaf (bitmap forms expand —
     the jnp analogue of the in-VMEM expansion the sparse kernel does).
-    The single source of truth for the per-mode storage keys."""
+    The single source of truth for the per-mode storage keys.
+
+    Conv bitmap leaves (a ``geom`` entry rides the dict) are stored in the
+    kernel's spatial-major layout with K padded to a multiple of 8
+    (kernels/conv_sparse.py); this strips the pad and permutes back to the
+    channel-major patch order every other consumer speaks.  NOT on the
+    serving hot path — ``apply_conv`` hands the packed pair straight to
+    the kernel."""
     if "bitmap" in w:
-        return bitmap_unpack(w["bitmap"], w["values"])
+        dense = bitmap_unpack(w["bitmap"], w["values"])
+        geom = w.get("geom")
+        if geom is not None:           # conv leaf: spatial-major, K padded
+            kk = geom.c_in * geom.k * geom.k
+            n = dense.shape[-1]
+            dense = dense[:kk].reshape(geom.k, geom.k, geom.c_in, n)
+            dense = dense.transpose(2, 0, 1, 3).reshape(kk, n)
+        elif "kdim" in w:              # linear leaf: strip the K%8 pad
+            dense = dense[:w["kdim"].k]
+        return dense
     return w.get("codes", w.get("bs_codes", w.get("values")))
 
 
@@ -171,6 +210,9 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
     x2, lead = _flatten_batch(x)
     x_q, s_x = act_quant(x2)
     if "bitmap" in w:                              # sparse_cfmm
+        # conv bitmap leaves are spatial-major and K-padded — silently
+        # wrong under a plain matmul; they must go through apply_conv
+        assert "geom" not in w, "conv bitmap leaf: use apply_conv"
         from repro.kernels import ops
         acc = ops.sparse_cfmm_matmul(x_q, w["bitmap"], w["values"])
     elif "bs_codes" in w:                          # bitserial ablation
@@ -185,14 +227,14 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
 
 
 def conv_codes_of(w: dict):
-    """Dense int8 codes + per-channel scale of any compiled conv leaf.
+    """Dense int8 codes + per-channel scale of a compiled conv leaf.
 
-    The bitmap-packed form expands in VMEM on the accelerator (the Pallas
-    sparse kernel); here the expansion happens at the op boundary so every
-    serving mode feeds the same implicit-GEMM conv kernel.  ``bs_codes``
-    (bit-serial ablation) are bit-exact equal to plain codes as int8
-    operands, so they ride the MXU path too — the bit-plane loop remains a
-    linear-layer-only ablation.
+    Oracle/debug seam only: bitmap leaves expand (and un-permute) through
+    ``packed_codes``.  The serving path never calls this for sparse_cfmm —
+    ``apply_conv`` dispatches the packed pair to the bitmap-native conv
+    kernel instead.  ``bs_codes`` (bit-serial ablation) are bit-exact
+    equal to plain codes as int8 operands, so they ride the MXU path too —
+    the bit-plane loop remains a linear-layer-only ablation.
     """
     return packed_codes(w), w["scale"]
 
@@ -204,10 +246,19 @@ def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
     x_q (N, H, W, c_in) int8 + its scalar scale; gamma/beta are the
     folded-BN scale and bias Collector vectors.  Returns f32 NHWC, or
     (int8, scale) with quant_out (see kernels.ops.conv2d).
+
+    Dispatch rides the leaf's storage keys: ``bitmap`` leaves hand the
+    packed (bitmap, values) pair straight to the bitmap-native sparse conv
+    kernel — no expansion at the op boundary, HBM sees ~2.6 bits/param at
+    s=0.8 — everything else feeds the dense-codes implicit-GEMM kernel.
     """
     geom = w["geom"]
-    codes, w_scale = conv_codes_of(w)
     from repro.kernels import ops
+    if "bitmap" in w:                  # sparse_cfmm: packed weights only
+        codes = (w["bitmap"], w["values"])
+        w_scale = w["scale"]
+    else:
+        codes, w_scale = conv_codes_of(w)
     return ops.conv2d(x_q, codes, geom.k, geom.stride, x_scale=x_scale,
                       w_scale=w_scale, gamma=gamma, beta=beta,
                       shortcut=shortcut, relu=relu, quant_out=quant_out)
@@ -220,16 +271,19 @@ def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
 def _compile_leaf(p: nn.Param, mode: str, sparsity: float):
     w = p.value.astype(jnp.float32)
     lead, in_ax, out_ax = p.axes[:-2], p.axes[-2], p.axes[-1]
-    fn = lambda wi: _compile_leaf_2d(wi, mode, sparsity)
+    geom = nn.conv_geom_of(p.kind)
+    conv_k = geom[0] if geom is not None else None
+    fn = lambda wi: _compile_leaf_2d(wi, mode, sparsity, conv_k)
     for _ in range(w.ndim - 2):                    # stacked (layers/experts)
         fn = jax.vmap(fn)
     out = fn(w)
     packed = {k: nn.Param(v, _leaf_axes(k, lead, in_ax, out_ax))
               for k, v in out.items()}
-    geom = nn.conv_geom_of(p.kind)
     if geom is not None:                           # conv weights stay
         k, stride = geom                           # self-describing
         packed["geom"] = ConvGeom(k, stride, w.shape[-2] // (k * k))
+    elif mode == "sparse_cfmm" and w.shape[-2] % 8 != 0:
+        packed["kdim"] = KDim(w.shape[-2])         # unpadded K (pad_rows8)
     return packed
 
 
@@ -237,24 +291,44 @@ def _leaf_axes(kind: str, lead, in_ax, out_ax):
     if kind == "scale":
         return lead + (None, out_ax)
     if kind == "bitmap":
-        return lead + (in_ax, out_ax)    # rows = in/8 (divisibility guarded)
+        return lead + (in_ax, out_ax)    # rows = ceil(in/8) (K padded to %8)
     if kind == "values":
         return lead + (None, out_ax)
     return lead + (in_ax, out_ax)        # codes / bs_codes
 
 
-def _compile_leaf_2d(w: jax.Array, mode: str, sparsity: float) -> dict:
+def pad_rows8(codes: jax.Array) -> jax.Array:
+    """Pad the K axis up to a multiple of 8 with all-zero (masked) rows —
+    the bitmap K-padding rule.  Zero codes pack to zero bits, so the pad
+    is invisible to the sparse kernels and exact under int8 matmul."""
+    pad = (-codes.shape[0]) % 8
+    if pad == 0:
+        return codes
+    return jnp.pad(codes, ((0, pad), (0, 0)))
+
+
+def _compile_leaf_2d(w: jax.Array, mode: str, sparsity: float,
+                     conv_k: int | None = None) -> dict:
     K = w.shape[0]
-    if mode == "sparse_cfmm" and K % 8 == 0:
+    if mode == "sparse_cfmm":
         keep_k = max(8, int(round(K * (1.0 - sparsity))))
         keep_k = min(K, ((keep_k + 7) // 8) * 8)
         qt = balanced_prune_codes(w, keep_k)
-        bitmap, values = bitmap_pack(qt.values, keep_k)
+        codes = qt.values
+        if conv_k is not None:
+            # conv leaves pack in the kernel's spatial-major tap layout
+            # (row = tap*c_in + c) so the packed pair feeds
+            # kernels/conv_sparse.py with no boundary permute/expand
+            c_in = K // (conv_k * conv_k)
+            codes = codes.reshape(c_in, conv_k, conv_k, -1).transpose(
+                1, 2, 0, 3).reshape(K, -1)
+        # K % 8 != 0 (e.g. the 7x7 stem, K = 3*49 = 147): pad + mask
+        # instead of the old silent dense fallback
+        bitmap, values = bitmap_pack(pad_rows8(codes), keep_k)
         return {"bitmap": bitmap, "values": values,
                 "scale": qt.scale.reshape(1, -1)}
     qt = quantize_int7(w, axis=-1)
-    key = {"int8": "values", "sparse_cfmm": "values",
-           "bitserial": "bs_codes"}.get(mode, "codes")
+    key = {"int8": "values", "bitserial": "bs_codes"}.get(mode, "codes")
     return {key: qt.values, "scale": qt.scale.reshape(1, -1)}
 
 

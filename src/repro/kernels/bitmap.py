@@ -1,0 +1,38 @@
+"""Shared on-chip bitmap-expand tile — the one piece of math every
+bitmap-packed sparse kernel needs.
+
+Format (core.compiled_linear.bitmap_pack):
+  bitmap (K/8, N) uint8 — little-endian validity bits down the K axis
+  values (keep_k, N) int8 — nonzero codes in ascending-row order per column
+
+``expand_bitmap_tile`` turns one VMEM-resident slab of packed bytes into
+dense int8 codes, carrying a running per-column nonzero count so callers
+can stream the K axis in chunks (the cumsum is the hardware analogue of
+the FPGA's compile-time wiring of nonzero adders).  Pure jnp, so the same
+function body runs inside Pallas kernels (sparse_matvec, conv_sparse), in
+interpret mode, and in the jnp oracles (kernels/ref.py) — HBM only ever
+sees packed bytes on every lowering.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expand_bitmap_tile(bm8: jnp.ndarray, values: jnp.ndarray,
+                       base: jnp.ndarray, keep_k: int):
+    """Expand one bitmap slab to dense codes.
+
+    bm8:    (rows8, n) uint8 — a K-chunk of the bitmap (rows8*8 K rows)
+    values: (keep_k, n) int8 — the full packed-values buffer
+    base:   (1, n) int32 — nonzeros consumed per column by earlier chunks
+    Returns (w_chunk (rows8*8, n) int8, new_base (1, n) int32).
+    """
+    rows8, n = bm8.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
+    bits = (bm8[:, None, :] >> shifts) & 1
+    mask = bits.reshape(rows8 * 8, n).astype(jnp.int32)
+    pos = base + jnp.cumsum(mask, axis=0) - 1           # rank within column
+    pos = jnp.clip(pos, 0, keep_k - 1)
+    gathered = jnp.take_along_axis(values, pos, axis=0)
+    w_chunk = jnp.where(mask > 0, gathered, jnp.int8(0))
+    return w_chunk, base + jnp.sum(mask, axis=0, keepdims=True)

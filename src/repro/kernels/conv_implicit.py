@@ -34,18 +34,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut):
-    if has_shortcut:
-        x_ref, w_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
-    else:
-        x_ref, w_ref, s_ref, b_ref, out_ref, amax_ref = refs
-        sc_ref = None
-    x = x_ref[0]                                   # (Hp, Wp, C) int8, VMEM
+def conv_tap_macs(x, k, stride, h_out, w_out, n_cols, tap_weights,
+                  carry=None):
+    """Implicit-im2col MAC loop shared by the dense and bitmap-native
+    sparse conv kernels: one strided VMEM slice + MXU matmul per tap, the
+    k*k loop unrolled at trace time (taps are static).
+
+    ``tap_weights(tap, carry) -> ((C, n_cols) int8 slab, carry)`` supplies
+    each tap's weight slab — a dense VMEM slice, or an on-chip bitmap
+    expand threading its running nonzero count through ``carry``.
+    """
     C = x.shape[-1]
     m_out = h_out * w_out
-    acc = jnp.zeros((m_out, w_ref.shape[1]), jnp.int32)
-    # implicit im2col: one strided VMEM slice + MXU matmul per tap, the
-    # k*k loop unrolls at trace time (taps are static)
+    acc = jnp.zeros((m_out, n_cols), jnp.int32)
     for dy in range(k):
         for dx in range(k):
             sl = jax.lax.slice(
@@ -53,12 +54,18 @@ def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut):
                 (dy + (h_out - 1) * stride + 1,
                  dx + (w_out - 1) * stride + 1, C),
                 (stride, stride, 1)).reshape(m_out, C)
-            tap = dy * k + dx
+            w_tap, carry = tap_weights(dy * k + dx, carry)
             acc += jax.lax.dot_general(
-                sl, w_ref[tap * C:(tap + 1) * C, :],
-                dimension_numbers=(((1,), (0,)), ((), ())),
+                sl, w_tap, dimension_numbers=(((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32)
-    # fused Collector: dequant * BN-scale (one vector), bias, shortcut, ReLU
+    return acc
+
+
+def collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref, *,
+                       m_out, m_pad, relu):
+    """Fused Collector: dequant * BN-scale (one vector), bias, shortcut,
+    ReLU, on-chip amax.  One implementation shared by both conv kernels,
+    so sparse and dense conv outputs are bit-identical by construction."""
     y = acc.astype(jnp.float32) * s_ref[...] + b_ref[...]
     if sc_ref is not None:
         y = y + sc_ref[0, :m_out, :]
@@ -68,6 +75,21 @@ def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut):
     if m_pad > m_out:
         y = jnp.pad(y, ((0, m_pad - m_out), (0, 0)))
     out_ref[0] = y
+
+
+def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut):
+    if has_shortcut:
+        x_ref, w_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
+    else:
+        x_ref, w_ref, s_ref, b_ref, out_ref, amax_ref = refs
+        sc_ref = None
+    x = x_ref[0]                                   # (Hp, Wp, C) int8, VMEM
+    C = x.shape[-1]
+    tap_weights = lambda tap, carry: (w_ref[tap * C:(tap + 1) * C, :], carry)
+    acc = conv_tap_macs(x, k, stride, h_out, w_out, w_ref.shape[1],
+                        tap_weights)
+    collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref,
+                       m_out=h_out * w_out, m_pad=m_pad, relu=relu)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -1,0 +1,133 @@
+"""Bitmap-native implicit-GEMM sparse convolution — Pallas TPU kernel.
+
+The paper's headline numbers come from *sparse constant parameters*: at
+s=0.8 the bitmap format stores (1-s)*8 + 1 = 2.6 bits/param instead of
+the 8 bits of dense int8 codes.  `conv_implicit.py` already keeps the
+im2col patch tensor out of HBM; this kernel carries the packed-weight win
+into the same launch — HBM only ever sees `(bitmap, values)` bytes, and
+the dense tap slabs exist solely in VMEM.
+
+Format (core.compiled_linear.compile_params, conv leaves, sparse_cfmm):
+  weights are *spatial-major* (k*k*c_in, c_out) — row = tap*c_in + c —
+  with K padded up to a multiple of 8 by all-zero masked tap rows, then
+  bitmap-packed column-wise:
+    bitmap (K_pad/8, c_out) uint8, values (keep_k, c_out) int8.
+
+Kernel: grid (N, c_out/bn), identical to conv_implicit.  Per grid cell
+the packed slab streams HBM->VMEM and expands via the shared
+`kernels.bitmap.expand_bitmap_tile`:
+
+* c_in % 8 == 0 — expand *per k-tap tile*, fused with the MAC: each tap's
+  (c_in, bn) slab is expanded and immediately fed to the MXU, carrying the
+  running nonzero count tap to tap; the full dense weight never exists.
+* otherwise (e.g. the c_in=3 stem) — byte rows straddle tap boundaries,
+  so the whole (K_pad, bn) slab expands in one tile, then the tap loop
+  slices it; still VMEM-only.
+
+The MAC loop and the Collector epilogue (dequant * folded-BN scale, bias,
+shortcut, ReLU, on-chip amax for the quantization-domain pass) are
+*shared code* with `conv_implicit.py` (`conv_tap_macs` /
+`collector_epilogue`) — only the tap-weight sourcing differs — so sparse
+and dense conv outputs are bit-identical for identical (expanded) codes
+by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitmap import expand_bitmap_tile
+from repro.kernels.conv_implicit import collector_epilogue, conv_tap_macs
+
+
+def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut,
+            c_in, keep_k):
+    if has_shortcut:
+        x_ref, bm_ref, val_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
+    else:
+        x_ref, bm_ref, val_ref, s_ref, b_ref, out_ref, amax_ref = refs
+        sc_ref = None
+    x = x_ref[0]                                   # (Hp, Wp, C) int8, VMEM
+    C = x.shape[-1]
+    bn = out_ref.shape[2]
+    vals = val_ref[...]
+    # the MAC loop and Collector are conv_implicit's own (shared code, so
+    # sparse == dense bit-identity holds by construction); only the tap
+    # weight sourcing differs — packed bytes expand on the fly in VMEM
+    if c_in % 8 == 0:                              # tap rows byte-aligned:
+        def tap_weights(tap, base):                # expand fused per tap,
+            bm8 = bm_ref[tap * C // 8:(tap + 1) * C // 8, :]
+            return expand_bitmap_tile(bm8, vals, base, keep_k)
+        carry = jnp.zeros((1, bn), jnp.int32)      # running nonzero count
+    else:                                          # taps straddle bytes
+        w_dense, _ = expand_bitmap_tile(           # (stem): one-shot slab
+            bm_ref[...], vals, jnp.zeros((1, bn), jnp.int32), keep_k)
+
+        def tap_weights(tap, carry):
+            return jax.lax.slice(w_dense, (tap * C, 0),
+                                 ((tap + 1) * C, bn)), carry
+        carry = None
+    acc = conv_tap_macs(x, k, stride, h_out, w_out, bn, tap_weights, carry)
+    collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref,
+                       m_out=h_out * w_out, m_pad=m_pad, relu=relu)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "stride", "h_out", "w_out", "bn", "relu", "interpret"))
+def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
+                         values: jax.Array, eff_scale: jax.Array,
+                         eff_bias: jax.Array,
+                         shortcut: jax.Array | None = None, *,
+                         k: int, stride: int, h_out: int, w_out: int,
+                         bn: int = 128, relu: bool = True,
+                         interpret: bool = False):
+    """Fused bitmap-native implicit-GEMM sparse conv.
+
+    x_pad:     (N, Hp, Wp, C) int8, already SAME-padded (ref.pad_same_nhwc)
+    bitmap:    (K_pad/8, n_out) uint8, spatial-major taps, K_pad =
+               k*k*C rounded up to a multiple of 8 (zero-masked tail)
+    values:    (keep_k, n_out) int8 nonzero codes, ascending-row order
+    eff_scale: (1, n_out) f32 = s_x * w_scale * bn_scale; eff_bias ditto
+    shortcut:  optional (N, m_pad, n_out) f32, m_pad = h_out*w_out rounded
+               up to a sublane multiple
+    Returns (y, amax) exactly as conv2d_implicit_pallas.
+    """
+    N, Hp, Wp, C = x_pad.shape
+    Kb8, n_out = bitmap.shape
+    keep_k = values.shape[0]
+    assert Kb8 * 8 == -(-k * k * C // 8) * 8, (Kb8, k, C)
+    assert n_out % bn == 0 and values.shape[1] == n_out, (n_out, bn)
+    assert Hp >= (h_out - 1) * stride + k and Wp >= (w_out - 1) * stride + k
+    m_out = h_out * w_out
+    m_pad = -(-m_out // 8) * 8
+    n_j = n_out // bn
+    kern = functools.partial(_kernel, k=k, stride=stride, h_out=h_out,
+                             w_out=w_out, m_pad=m_pad, relu=relu,
+                             has_shortcut=shortcut is not None,
+                             c_in=C, keep_k=keep_k)
+    in_specs = [
+        pl.BlockSpec((1, Hp, Wp, C), lambda n, j: (n, 0, 0, 0)),
+        pl.BlockSpec((Kb8, bn), lambda n, j: (0, j)),
+        pl.BlockSpec((keep_k, bn), lambda n, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
+    ]
+    args = [x_pad, bitmap, values, eff_scale, eff_bias]
+    if shortcut is not None:
+        assert shortcut.shape == (N, m_pad, n_out), shortcut.shape
+        in_specs.append(pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)))
+        args.append(shortcut.astype(jnp.float32))
+    y, amax = pl.pallas_call(
+        kern,
+        grid=(N, n_j),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)),
+                   pl.BlockSpec((1, 1), lambda n, j: (n, j))],
+        out_shape=[jax.ShapeDtypeStruct((N, m_pad, n_out), jnp.float32),
+                   jax.ShapeDtypeStruct((N, n_j), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    return y, amax

@@ -70,6 +70,12 @@ def sparse_cfmm_matmul(x_q: jax.Array, bitmap: jax.Array,
                        scale: jax.Array | None = None) -> jax.Array:
     """Bitmap-packed sparse matmul; int32 out (or f32 with scale fused)."""
     mode = _mode()
+    if bitmap.shape[0] * 8 != x_q.shape[1]:
+        # K padded to a multiple of 8 at compile time (masked tail rows);
+        # zero int8 activations are exact, so pad x to match
+        assert bitmap.shape[0] * 8 == -(-x_q.shape[1] // 8) * 8, (
+            bitmap.shape, x_q.shape)
+        x_q, _ = _pad_to(x_q, 1, 8)
     if mode == "jnp":
         acc = ref.sparse_matvec_ref(x_q, bitmap, values)
         if scale is None:
@@ -139,6 +145,10 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     x_q:     (N, H, W, c_in) int8 activations, x_scale their scalar scale
     codes:   (c_in*k*k, c_out) int8 constant weight codes in patch
              (channel-major) order — the layout ``compile_params`` stores
+             — OR a packed ``(bitmap, values)`` pair in the spatial-major
+             bitmap-native layout (kernels/conv_sparse.py): the
+             sparse_cfmm fast path, where packed bytes reach the kernel
+             and the dense weight never exists outside VMEM
     w_scale: per-output-channel dequant scale, broadcastable to (c_out,)
     gamma/beta: folded-BN scale and bias (the Non-Kernel Collector ops)
     shortcut:   optional f32 (N, h_out, w_out, c_out) residual to add
@@ -151,8 +161,15 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     """
     mode = _mode()
     N, H, W, C = x_q.shape
-    n_out = codes.shape[1]
-    assert codes.shape[0] == C * k * k, (codes.shape, C, k)
+    packed = isinstance(codes, (tuple, list))
+    if packed:
+        bitmap, values = codes
+        n_out = bitmap.shape[1]
+        assert bitmap.shape[0] * 8 == -(-C * k * k // 8) * 8, (
+            bitmap.shape, C, k)
+    else:
+        n_out = codes.shape[1]
+        assert codes.shape[0] == C * k * k, (codes.shape, C, k)
     one = jnp.ones((n_out,), jnp.float32)
     eff_scale = (jnp.asarray(x_scale, jnp.float32)
                  * w_scale.reshape(-1).astype(jnp.float32)
@@ -160,24 +177,36 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     eff_bias = (jnp.zeros((n_out,), jnp.float32) if beta is None
                 else beta.astype(jnp.float32))
     if mode == "jnp":
-        y = ref.conv2d_collector_ref(x_q, codes, k, stride, eff_scale,
-                                     eff_bias, shortcut, relu)
+        if packed:
+            y = ref.conv2d_sparse_collector_ref(
+                x_q, bitmap, values, k, stride, eff_scale, eff_bias,
+                shortcut, relu)
+        else:
+            y = ref.conv2d_collector_ref(x_q, codes, k, stride, eff_scale,
+                                         eff_bias, shortcut, relu)
         amax_of = lambda: jnp.max(jnp.abs(y))
     else:
-        from repro.kernels.conv_implicit import conv2d_implicit_pallas
         xp, h_out, w_out = ref.pad_same_nhwc(x_q, k, stride)
         m_out, m_pad = h_out * w_out, -(-h_out * w_out // 8) * 8
         bn = 128 if n_out % 128 == 0 else _largest_tile(n_out, 128)
-        w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
         sc = None
         if shortcut is not None:
             sc = shortcut.astype(jnp.float32).reshape(N, m_out, n_out)
             sc = jnp.pad(sc, ((0, 0), (0, m_pad - m_out), (0, 0)))
-        y_flat, _amax = conv2d_implicit_pallas(
-            xp, w_sp.reshape(k * k * C, n_out),
-            eff_scale.reshape(1, n_out), eff_bias.reshape(1, n_out), sc,
-            k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
-            relu=relu, interpret=(mode == "interpret"))
+        kw = dict(k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
+                  relu=relu, interpret=(mode == "interpret"))
+        if packed:
+            from repro.kernels.conv_sparse import conv2d_sparse_pallas
+            y_flat, _amax = conv2d_sparse_pallas(
+                xp, bitmap, values, eff_scale.reshape(1, n_out),
+                eff_bias.reshape(1, n_out), sc, **kw)
+        else:
+            from repro.kernels.conv_implicit import conv2d_implicit_pallas
+            w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
+            y_flat, _amax = conv2d_implicit_pallas(
+                xp, w_sp.reshape(k * k * C, n_out),
+                eff_scale.reshape(1, n_out), eff_bias.reshape(1, n_out),
+                sc, **kw)
         y = y_flat[:, :m_out, :].reshape(N, h_out, w_out, n_out)
         amax_of = lambda: jnp.max(_amax)   # reduced on-chip in the epilogue
     if not quant_out:

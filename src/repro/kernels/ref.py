@@ -110,6 +110,24 @@ def im2col_ref(x: jax.Array, k: int, stride: int) -> jax.Array:
     return p.reshape(N, h_out, w_out, C * k * k)
 
 
+def _conv_taps_spatial(xp: jax.Array, w_sp: jax.Array, k: int, stride: int,
+                       h_out: int, w_out: int) -> jax.Array:
+    """Tap-loop int8 conv on a padded image with spatial-major weights.
+
+    xp: (N, Hp, Wp, C) int8; w_sp: (k, k, C, n_out) int8 -> int32 NHWC.
+    """
+    N = xp.shape[0]
+    n_out = w_sp.shape[-1]
+    acc = jnp.zeros((N, h_out, w_out, n_out), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            sl = _shift_slice(xp, dy, dx, h_out, w_out, stride)
+            acc = acc + jax.lax.dot_general(
+                sl, w_sp[dy, dx], dimension_numbers=(((3,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+    return acc
+
+
 def conv2d_int8_ref(x_q: jax.Array, codes: jax.Array, k: int,
                     stride: int) -> jax.Array:
     """int8 NHWC conv -> int32 (exact): shift-slice matmuls, no im2col.
@@ -121,14 +139,30 @@ def conv2d_int8_ref(x_q: jax.Array, codes: jax.Array, k: int,
     xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
     # spatial-major weight view: tap (dy, dx) -> contiguous (C, n_out) slab
     w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
-    acc = jnp.zeros((N, h_out, w_out, n_out), jnp.int32)
-    for dy in range(k):
-        for dx in range(k):
-            sl = _shift_slice(xp, dy, dx, h_out, w_out, stride)
-            acc = acc + jax.lax.dot_general(
-                sl, w_sp[dy, dx], dimension_numbers=(((3,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-    return acc
+    return _conv_taps_spatial(xp, w_sp, k, stride, h_out, w_out)
+
+
+def conv2d_sparse_int8_ref(x_q: jax.Array, bitmap: jax.Array,
+                           values: jax.Array, k: int,
+                           stride: int) -> jax.Array:
+    """Bitmap-native int8 conv oracle -> int32 (exact).
+
+    bitmap/values: the packed *spatial-major* conv weight layout
+    (kernels/conv_sparse.py) — rows tap*c_in + c, K padded to %8 with
+    zero-masked tail rows.  The expansion runs through the same
+    ``expand_bitmap_tile`` the Pallas kernels use (never through
+    ``bitmap_unpack`` — this is the jnp lowering of the serving hot path,
+    packed bytes in, VMEM-analogue expansion inside).
+    """
+    from repro.kernels.bitmap import expand_bitmap_tile
+    N, _, _, C = x_q.shape
+    n_out = bitmap.shape[1]
+    kk = C * k * k
+    w_dense, _ = expand_bitmap_tile(
+        bitmap, values, jnp.zeros((1, n_out), jnp.int32), values.shape[0])
+    w_sp = w_dense[:kk].reshape(k, k, C, n_out)
+    xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
+    return _conv_taps_spatial(xp, w_sp, k, stride, h_out, w_out)
 
 
 def conv2d_collector_ref(x_q: jax.Array, codes: jax.Array, k: int,
@@ -141,6 +175,21 @@ def conv2d_collector_ref(x_q: jax.Array, codes: jax.Array, k: int,
     broadcastable — the whole Non-Kernel epilogue as two vectors.
     """
     acc = conv2d_int8_ref(x_q, codes, k, stride)
+    return _collector(acc, eff_scale, eff_bias, shortcut, relu)
+
+
+def conv2d_sparse_collector_ref(x_q: jax.Array, bitmap: jax.Array,
+                                values: jax.Array, k: int, stride: int,
+                                eff_scale: jax.Array, eff_bias: jax.Array,
+                                shortcut=None, relu: bool = True) -> jax.Array:
+    """Fused bitmap-native conv + Collector oracle (jnp lowering of
+    kernels/conv_sparse.py; packed weights in, same epilogue maths)."""
+    acc = conv2d_sparse_int8_ref(x_q, bitmap, values, k, stride)
+    return _collector(acc, eff_scale, eff_bias, shortcut, relu)
+
+
+def _collector(acc: jax.Array, eff_scale: jax.Array, eff_bias: jax.Array,
+               shortcut, relu: bool) -> jax.Array:
     y = acc.astype(jnp.float32) * eff_scale + eff_bias
     if shortcut is not None:
         y = y + shortcut.astype(jnp.float32)

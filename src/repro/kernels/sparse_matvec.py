@@ -11,8 +11,8 @@ Format (core.compiled_linear.bitmap_pack):
   values (keep_k, N) int8 — nonzero codes in ascending-row order per column
 
 Kernel: grid over N tiles; K is processed in VMEM-resident chunks with a
-running per-column nonzero count carried across chunks (the cumsum is the
-hardware analogue of the FPGA's compile-time wiring of nonzero adders).
+running per-column nonzero count carried across chunks (the expand tile
+lives in kernels/bitmap.py, shared with the bitmap-native conv kernel).
 The expansion lives entirely in VMEM — HBM only ever sees packed bytes.
 """
 from __future__ import annotations
@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.bitmap import expand_bitmap_tile
+
 
 def _kernel(x_ref, bitmap_ref, values_ref, scale_ref, out_ref, acc_ref,
             *, k_chunk: int, n_chunks: int, keep_k: int):
@@ -34,18 +36,13 @@ def _kernel(x_ref, bitmap_ref, values_ref, scale_ref, out_ref, acc_ref,
         base = carry  # (1, bn) int32: nonzeros consumed per column so far
         rows8 = k_chunk // 8
         bm8 = bitmap_ref[pl.ds(c * rows8, rows8), :]            # (rows8, bn)
-        shifts = jnp.arange(8, dtype=jnp.uint8)[None, :, None]
-        bits = ((bm8[:, None, :] >> shifts) & 1)
-        mask = bits.reshape(k_chunk, bn).astype(jnp.int32)      # (kc, bn)
-        pos = base + jnp.cumsum(mask, axis=0) - 1               # rank in col
-        pos = jnp.clip(pos, 0, keep_k - 1)
-        gathered = jnp.take_along_axis(values_ref[...], pos, axis=0)
-        w_chunk = jnp.where(mask > 0, gathered, jnp.int8(0))    # (kc, bn)
+        w_chunk, base = expand_bitmap_tile(bm8, values_ref[...], base,
+                                           keep_k)              # (kc, bn)
         x_chunk = x_ref[:, pl.ds(c * k_chunk, k_chunk)]         # (M, kc)
         acc_ref[...] += jax.lax.dot_general(
             x_chunk, w_chunk, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)
-        return base + jnp.sum(mask, axis=0, keepdims=True)
+        return base
 
     acc_ref[...] = jnp.zeros_like(acc_ref)
     jax.lax.fori_loop(0, n_chunks, body,

@@ -16,7 +16,11 @@ Two forward paths (DESIGN.md §4):
   (``compiled_linear.apply_conv``) with the whole Collector in the
   epilogue, and residual blocks run a quantization-domain pass — one
   ``act_quant`` at block entry, then activations stay int8 between the
-  a/b/c convs instead of per-conv f32 requant round-trips.
+  a/b/c convs instead of per-conv f32 requant round-trips.  In
+  ``sparse_cfmm`` mode the weight leaves are bitmap-packed and the same
+  seam dispatches to the bitmap-native sparse conv kernel
+  (``kernels/conv_sparse.py``) — this file needs no sparse-specific code;
+  the leaf's storage keys select the dataflow.
 
 Inference-focused (the paper compiles post-training parameters); a width
 multiplier supports reduced smoke configs.

@@ -1,0 +1,91 @@
+"""Property-based round-trips for bitmap_pack/bitmap_unpack (the packed
+sparse weight format every sparse kernel consumes): random keep_k, K at
+and off the %8 boundary (via the pad_rows8 K-padding rule), all-zero
+columns, and the keep_k == K dense limit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import compiled_linear as cl
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_codes(seed: int, K: int, N: int, keep_k: int,
+                  zero_col_frac: float = 0.0) -> np.ndarray:
+    """int8 codes with <= keep_k nonzeros per column (random count and
+    row placement), optionally forcing some columns all-zero."""
+    rng = np.random.RandomState(seed)
+    codes = np.zeros((K, N), np.int8)
+    for col in range(N):
+        if rng.rand() < zero_col_frac:
+            continue                       # all-zero column
+        nnz = rng.randint(0, min(keep_k, K) + 1)
+        rows = rng.choice(K, size=nnz, replace=False)
+        mags = rng.randint(1, 64, size=nnz)
+        signs = rng.choice(np.array([-1, 1], np.int64), size=nnz)
+        codes[rows, col] = (mags * signs).astype(np.int8)
+    return codes
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([16, 37, 115, 147, 152, 256]),   # on & off %8
+       st.sampled_from([8, 24, 40]),
+       st.sampled_from([4, 16]),
+       st.floats(0.0, 0.5))
+def test_pack_unpack_roundtrip(seed, K, keep_k, N, zero_col_frac):
+    codes = _random_codes(seed, K, N, keep_k, zero_col_frac)
+    padded = cl.pad_rows8(jnp.asarray(codes))
+    assert padded.shape[0] % 8 == 0 and padded.shape[0] - K < 8
+    bitmap, values = cl.bitmap_pack(padded, keep_k)
+    assert bitmap.shape == (padded.shape[0] // 8, N)
+    assert values.shape == (keep_k, N)
+    dense = np.asarray(cl.bitmap_unpack(bitmap, values))
+    np.testing.assert_array_equal(dense[:K], codes)
+    assert (dense[K:] == 0).all()          # masked pad rows stay zero
+
+
+@given(st.integers(0, 10_000), st.sampled_from([8, 40, 104]),
+       st.sampled_from([4, 8]))
+def test_dense_limit_keep_k_equals_K(seed, K, N):
+    """keep_k == K: every row may be a nonzero — the bitmap format
+    degrades gracefully to a dense store plus an all-ones mask."""
+    rng = np.random.RandomState(seed)
+    codes = rng.randint(-63, 64, size=(K, N)).astype(np.int8)
+    codes[0, :] = 1                        # ensure some structure survives
+    bitmap, values = cl.bitmap_pack(jnp.asarray(codes), K)
+    dense = np.asarray(cl.bitmap_unpack(bitmap, values))
+    np.testing.assert_array_equal(dense, codes)
+    fully_dense_cols = (codes != 0).all(axis=0)
+    bits = np.unpackbits(np.asarray(bitmap), axis=0, bitorder="little")
+    np.testing.assert_array_equal(bits.all(axis=0), fully_dense_cols)
+
+
+def test_all_zero_matrix_roundtrip():
+    codes = jnp.zeros((24, 4), jnp.int8)
+    bitmap, values = cl.bitmap_pack(codes, 8)
+    assert not np.asarray(bitmap).any()
+    np.testing.assert_array_equal(np.asarray(cl.bitmap_unpack(bitmap,
+                                                              values)),
+                                  np.zeros((24, 4), np.int8))
+
+
+@given(st.integers(0, 10_000), st.sampled_from([9, 31, 147]))
+def test_pad_rows8_exact_under_matmul(seed, K):
+    """The K-padding rule is exact: padded codes against zero-padded int8
+    activations give the same matmul as the unpadded originals."""
+    from repro.kernels import ref
+    codes = _random_codes(seed, K, 8, keep_k=K)
+    x = np.random.RandomState(seed + 1).randint(
+        -127, 128, size=(3, K)).astype(np.int8)
+    padded = cl.pad_rows8(jnp.asarray(codes))
+    xp = jnp.pad(jnp.asarray(x), ((0, 0), (0, padded.shape[0] - K)))
+    want = ref.int8_matmul_ref(jnp.asarray(x), jnp.asarray(codes))
+    got = ref.int8_matmul_ref(xp, padded)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -160,7 +160,9 @@ def test_apply_conv_all_serve_modes(mode):
     x_q, s_x = cl.act_quant(x)
     y = cl.apply_conv(packed["w"], x_q, s_x, relu=False)
     if mode == "sparse_cfmm":    # pruned weights: subspace only
-        codes = cl.bitmap_unpack(packed["w"]["bitmap"], packed["w"]["values"])
+        # packed_codes un-permutes the kernel's spatial-major bitmap
+        # layout back to channel-major patch order
+        codes = cl.packed_codes(packed["w"])
         w_pruned = (codes.astype(jnp.float32) * packed["w"]["scale"]).reshape(
             C, k, k, n_out).transpose(1, 2, 0, 3)
         want = jax.lax.conv_general_dilated(

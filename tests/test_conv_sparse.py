@@ -1,0 +1,181 @@
+"""Bitmap-native sparse conv: packed weights reach the kernel (no op-
+boundary expansion), bit-identity vs the dense-expanded conv across the
+GEOMS x SIZES sweep, the K%8 pad+mask compile fix (7x7 stem, K=147), and
+amax/quant_out parity across lowerings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.kernels import ops, ref
+from test_conv import GEOMS, SIZES
+
+
+def _sparse_conv_leaf(C, n_out, k, stride, sparsity=0.8, seed=0):
+    key = jax.random.PRNGKey(seed + 31 * k + C)
+    p = {"w": nn.conv_param(key, C, n_out, k, stride,
+                            ("conv_in", "conv_out"))}
+    packed = nn.unbox(cl.compile_params(p, mode="sparse_cfmm",
+                                        sparsity=sparsity))
+    return packed["w"]
+
+
+def _x(C, H, W, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (2, H, W, C),
+                              -127, 128, jnp.int8)
+
+
+@pytest.mark.parametrize("k,stride", GEOMS)
+@pytest.mark.parametrize("H,W", SIZES)
+def test_sparse_conv_bit_identical_to_dense_expanded(k, stride, H, W):
+    """Acceptance sweep: the packed-weight conv (interpret-mode Pallas
+    kernel) equals the dense-expanded-codes conv bit for bit — both the
+    per-tap expand path (c_in % 8 == 0) and the one-shot slab path."""
+    for C in (8, 3):                   # byte-aligned taps / straddling taps
+        w = _sparse_conv_leaf(C, 16, k, stride, seed=H + W)
+        x = _x(C, H, W)
+        y_sp = cl.apply_conv(w, x, 0.02, relu=False)
+        codes = cl.packed_codes(w)     # dense channel-major, pad stripped
+        y_dn = ops.conv2d(x, codes, k, stride, x_scale=0.02,
+                          w_scale=w["scale"].reshape(-1), relu=False)
+        np.testing.assert_array_equal(np.asarray(y_sp), np.asarray(y_dn))
+
+
+@pytest.mark.parametrize("k,stride", [(3, 1), (7, 2)])
+def test_sparse_conv_kernel_vs_jnp_oracle_exact(k, stride):
+    """conv2d_sparse_pallas (interpret) == the bitmap-native jnp oracle,
+    exactly, with the full Collector epilogue fused."""
+    C, n_out = 8, 16
+    w = _sparse_conv_leaf(C, n_out, k, stride)
+    x = _x(C, 9, 7)
+    key = jax.random.PRNGKey(5)
+    gamma = jax.random.normal(key, (n_out,))
+    beta = jax.random.normal(jax.random.fold_in(key, 1), (n_out,))
+    h_out, w_out = -(-9 // stride), -(-7 // stride)
+    sc = jax.random.normal(jax.random.fold_in(key, 2),
+                           (2, h_out, w_out, n_out))
+    y = ops.conv2d(x, (w["bitmap"], w["values"]), k, stride, x_scale=0.03,
+                   w_scale=w["scale"].reshape(-1), gamma=gamma, beta=beta,
+                   shortcut=sc, relu=True)
+    eff_scale = 0.03 * w["scale"].reshape(-1) * gamma
+    want = ref.conv2d_sparse_collector_ref(
+        x, w["bitmap"], w["values"], k, stride, eff_scale, beta, sc, True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_stem_k147_compiles_to_bitmap():
+    """Regression for the silent dense fallback: ResNet50's 7x7 stem has
+    K = 3*49 = 147; sparse_cfmm must pad+mask to 152 and carry a bitmap
+    key, and the packed forward must match the pruned-dense reference."""
+    w = _sparse_conv_leaf(3, 64, 7, 2)
+    assert set(w) == {"bitmap", "values", "scale", "geom"}
+    assert w["bitmap"].shape == (19, 64)           # ceil(147/8) = 19 rows
+    codes = cl.packed_codes(w)
+    assert codes.shape == (147, 64)                # pad stripped
+    x = _x(3, 16, 16)
+    y_sp = cl.apply_conv(w, x, 0.05, relu=True)
+    y_dn = ops.conv2d(x, codes, 7, 2, x_scale=0.05,
+                      w_scale=w["scale"].reshape(-1), relu=True)
+    np.testing.assert_array_equal(np.asarray(y_sp), np.asarray(y_dn))
+
+
+def test_linear_k_off_boundary_compiles_to_bitmap():
+    """The pad+mask fix covers linear leaves too: K % 8 != 0 packs (rows =
+    ceil(K/8)) instead of falling back to dense int8, and the kernel pads
+    activations with exact zero columns."""
+    key = jax.random.PRNGKey(3)
+    p = {"w": nn.Param(jax.random.normal(key, (147, 64)) * 0.05,
+                       ("embed", "ffn_in"), "linear")}
+    packed = nn.unbox(cl.compile_params(p, mode="sparse_cfmm",
+                                        sparsity=0.8))
+    assert set(packed["w"]) == {"bitmap", "values", "scale", "kdim"}
+    assert packed["w"]["bitmap"].shape == (19, 64)
+    # the KDim marker keeps the packed_codes/dense_of shape contract: the
+    # pad_rows8 rows are stripped, algebraic consumers see the true K
+    codes = cl.packed_codes(packed["w"])
+    assert codes.shape == (147, 64)
+    assert cl.dense_of(packed["w"]).shape == (147, 64)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 147))
+    y = cl.apply_linear(packed["w"], x)
+    x_q, s_x = cl.act_quant(x)
+    want = (ref.int8_matmul_ref(x_q, codes)
+            .astype(jnp.float32) * (s_x * packed["w"]["scale"]))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_quant_out_amax_parity_across_lowerings(monkeypatch, packed):
+    """The on-chip epilogue amax (interpret mode) yields the same s_y as
+    the jnp max(abs(y)) path, so the int8 activations handed to the next
+    block are identical across lowerings — for dense codes and for the
+    bitmap-native sparse path."""
+    C, n_out, k, stride = 8, 16, 3, 2
+    w = _sparse_conv_leaf(C, n_out, k, stride)
+    codes = (w["bitmap"], w["values"]) if packed else cl.packed_codes(w)
+    x = _x(C, 9, 7)
+    outs = {}
+    for mode in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", mode)
+        outs[mode] = ops.conv2d(x, codes, k, stride, x_scale=0.02,
+                                w_scale=w["scale"].reshape(-1),
+                                gamma=jnp.ones((n_out,)),
+                                beta=jnp.zeros((n_out,)), relu=True,
+                                quant_out=True)
+    np.testing.assert_array_equal(np.asarray(outs["jnp"][0]),
+                                  np.asarray(outs["interpret"][0]))
+    np.testing.assert_array_equal(np.asarray(outs["jnp"][1]),
+                                  np.asarray(outs["interpret"][1]))
+
+
+def test_serving_hot_path_never_expands(monkeypatch):
+    """Packed weights reach the kernel: zero calls to bitmap_unpack /
+    bitmap_expand_ref while serving a sparse conv in either lowering (the
+    in-kernel expand is kernels.bitmap.expand_bitmap_tile, VMEM-only)."""
+    calls = {"n": 0}
+    real_unpack = cl.bitmap_unpack
+    real_expand = ref.bitmap_expand_ref
+
+    def spy_unpack(*a, **kw):
+        calls["n"] += 1
+        return real_unpack(*a, **kw)
+
+    def spy_expand(*a, **kw):
+        calls["n"] += 1
+        return real_expand(*a, **kw)
+
+    monkeypatch.setattr(cl, "bitmap_unpack", spy_unpack)
+    monkeypatch.setattr(ref, "bitmap_expand_ref", spy_expand)
+    w = _sparse_conv_leaf(8, 16, 3, 1)
+    x = _x(8, 8, 8)
+    for mode in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", mode)
+        y_q, s_y = cl.apply_conv(w, x, 0.02, quant_out=True)
+        assert y_q.dtype == jnp.int8
+    assert calls["n"] == 0
+
+
+def test_expand_tile_chunked_matches_unpack():
+    """The shared expand tile, streamed in chunks with a carried nonzero
+    count (exactly what both sparse kernels do), reproduces the one-shot
+    bitmap_unpack."""
+    from repro.kernels.bitmap import expand_bitmap_tile
+    key = jax.random.PRNGKey(9)
+    K, N, keep = 96, 16, 24
+    qt = cl.balanced_prune_codes(jax.random.normal(key, (K, N)), keep)
+    bitmap, values = cl.bitmap_pack(qt.values, keep)
+    want = cl.bitmap_unpack(bitmap, values)
+    for rows8 in (1, 3, 12):           # 8-, 24-, 96-row chunks
+        base = jnp.zeros((1, N), jnp.int32)
+        got = []
+        for c in range(0, K // 8, rows8):
+            w_c, base = expand_bitmap_tile(bitmap[c:c + rows8], values,
+                                           base, keep)
+            got.append(w_c)
+        np.testing.assert_array_equal(np.asarray(jnp.concatenate(got)),
+                                      np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(base), np.asarray((qt.values != 0).sum(0)[None, :]))

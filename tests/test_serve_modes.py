@@ -1,0 +1,99 @@
+"""Serve-mode conformance matrix: every mode in SERVE_MODES through a
+full residual block (a/b/c convs + projection shortcut + quantization-
+domain pass), asserting the jnp-oracle and REPRO_PALLAS=interpret
+lowerings agree — bit-exactly on the int paths (the int8 activations
+between convs), to fp tolerance on the f32 epilogue output —
+parameterized over the Table I corner geometries (test_conv.GEOMS)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.models import resnet
+from test_conv import GEOMS
+
+IN_CH, MID, OUT = 8, 8, 16
+H, W = 7, 9                            # odd-spatial corner
+
+
+def _block_params(k, stride, seed=0):
+    """One bottleneck residual block; (k, stride) rides the main b conv,
+    the projection shortcut strides to match."""
+    keys = iter(jax.random.split(jax.random.PRNGKey(seed + 7 * k), 8))
+    return {
+        "a": resnet._conv_init(next(keys), IN_CH, MID, 1),
+        "b": resnet._conv_init(next(keys), MID, MID, k, stride=stride),
+        "c": resnet._conv_init(next(keys), MID, OUT, 1),
+        "sc": resnet._conv_init(next(keys), IN_CH, OUT, 1, stride=stride),
+    }
+
+
+def _block_forward(params, x, k, stride):
+    """The resnet residual-block dataflow, dense or compiled depending on
+    the leaf form — mirrors models/resnet.apply's two paths."""
+    if not isinstance(params["a"]["w"], dict):     # dense training path
+        sc = resnet._conv_apply(params["sc"], x, 1, stride, relu=False)
+        y = resnet._conv_apply(params["a"], x, 1)
+        y = resnet._conv_apply(params["b"], y, k, stride)
+        h = resnet._conv_apply(params["c"], y, 1, relu=True, shortcut=sc)
+        return h, None, None
+    x_q, s = cl.act_quant(x)                       # one quant per block
+    sc = resnet._conv_q(params["sc"], x_q, s, relu=False)
+    a_q, s_a = resnet._conv_q(params["a"], x_q, s, quant_out=True)
+    b_q, s_b = resnet._conv_q(params["b"], a_q, s_a, quant_out=True)
+    h = resnet._conv_q(params["c"], b_q, s_b, shortcut=sc, relu=True)
+    return h, a_q, b_q
+
+
+@pytest.mark.parametrize("k,stride", GEOMS)
+@pytest.mark.parametrize("mode", cl.SERVE_MODES)
+def test_block_lowerings_agree(monkeypatch, mode, k, stride):
+    params = _block_params(k, stride)
+    served = nn.unbox(params) if mode == "dense" else \
+        nn.unbox(cl.compile_params(params, mode=mode, sparsity=0.5))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, H, W, IN_CH))
+    outs = {}
+    for lowering in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", lowering)
+        outs[lowering] = _block_forward(served, x, k, stride)
+    h_j, a_j, b_j = outs["jnp"]
+    h_i, a_i, b_i = outs["interpret"]
+    if mode != "dense":
+        # int paths bit-exact: the quantization-domain int8 activations
+        # handed between convs are identical across lowerings
+        np.testing.assert_array_equal(np.asarray(a_j), np.asarray(a_i))
+        np.testing.assert_array_equal(np.asarray(b_j), np.asarray(b_i))
+    np.testing.assert_allclose(np.asarray(h_j), np.asarray(h_i),
+                               rtol=1e-5, atol=1e-5)
+    assert h_j.shape == (2, -(-H // stride), -(-W // stride), OUT)
+
+
+@pytest.mark.parametrize("mode", [m for m in cl.SERVE_MODES if m != "dense"])
+def test_block_modes_within_quant_tolerance_of_dense(mode):
+    """Sanity anchor for the matrix: every compiled mode's block output
+    stays within quantization tolerance of the dense training path (on
+    the pruned subspace for sparse_cfmm, as in test_conv)."""
+    k, stride = 3, 1
+    params = _block_params(k, stride)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, H, W, IN_CH)) * 0.5
+    if mode == "sparse_cfmm":
+        # compare on the pruned model: dense reference uses the same
+        # pruned weights the packed leaves carry
+        served = nn.unbox(cl.compile_params(params, mode=mode,
+                                            sparsity=0.5))
+        pruned = jax.tree.map(lambda p: p, params,
+                              is_leaf=lambda t: isinstance(t, nn.Param))
+        for name in ("a", "b", "c", "sc"):
+            codes = cl.packed_codes(served[name]["w"])
+            wd = codes.astype(jnp.float32) * served[name]["w"]["scale"]
+            pruned[name]["w"] = nn.Param(wd, params[name]["w"].axes,
+                                         params[name]["w"].kind)
+        want, _, _ = _block_forward(nn.unbox(pruned), x, k, stride)
+    else:
+        served = nn.unbox(cl.compile_params(params, mode=mode))
+        want, _, _ = _block_forward(nn.unbox(params), x, k, stride)
+    got, _, _ = _block_forward(served, x, k, stride)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.08, (mode, rel)
