@@ -15,12 +15,15 @@ per serving compilation mode:
                bitmap-packed constant sparsity: (1-s)*8 + 1 bits/param
                (~2.6 bits at s=0.8 vs 16 for bf16) — the paper's
                zero-overhead sparsity converted to a memory-bandwidth win.
-               K pads up to a multiple of 8 with masked all-zero rows;
-               conv leaves pack in the sparse conv kernel's spatial-major
-               tap layout (kernels/conv_sparse.py) so serving streams the
-               packed bytes straight into VMEM
+               K pads up to a multiple of 8 with masked all-zero rows
   bitserial    {'codes': int8, 'scale'}, bit-plane matmul — FPGA bit-serial
                ablation (sum_b 2^b * (x @ ternary plane_b))
+
+EVERY conv leaf — packed or dense — is stored in the conv kernels'
+spatial-major tap layout (row = tap*c_in + c, kernels/conv_sparse.py) at
+compile time: serving streams the stored bytes straight into VMEM and
+``ops.conv2d`` performs zero call-time layout shuffles; the single
+permute (kernels.ref.to_spatial_major) runs here, once.
 
 ``compile_params`` converts a trained parameter tree into its constant-
 parameter ("Compiled NN") serving form.  It is jax-traceable, so the
@@ -43,6 +46,7 @@ import jax.numpy as jnp
 from repro import nn
 from repro.core import cfmm
 from repro.core.quantize import INT8_ACT_MAX, quantize_int7
+from repro.kernels import ref as kref
 from repro.kernels.bitmap import expand_bitmap_tile
 
 SERVE_MODES = ("dense", "int8", "cfmm", "sparse_cfmm", "bitserial")
@@ -165,24 +169,25 @@ def packed_codes(w: dict) -> jax.Array:
     the jnp analogue of the in-VMEM expansion the sparse kernel does).
     The single source of truth for the per-mode storage keys.
 
-    Conv bitmap leaves (a ``geom`` entry rides the dict) are stored in the
-    kernel's spatial-major layout with K padded to a multiple of 8
-    (kernels/conv_sparse.py); this strips the pad and permutes back to the
-    channel-major patch order every other consumer speaks.  NOT on the
-    serving hot path — ``apply_conv`` hands the packed pair straight to
-    the kernel."""
+    EVERY conv leaf (a ``geom`` entry rides the dict) is stored in the
+    kernels' spatial-major tap layout at compile time — bitmap leaves
+    additionally K-padded to a multiple of 8 (kernels/conv_sparse.py);
+    this strips the pad and permutes back to the channel-major patch
+    order every other consumer speaks.  NOT on the serving hot path —
+    ``apply_conv`` hands the stored bytes straight to the kernel."""
+    geom = w.get("geom")
     if "bitmap" in w:
         dense = bitmap_unpack(w["bitmap"], w["values"])
-        geom = w.get("geom")
         if geom is not None:           # conv leaf: spatial-major, K padded
             kk = geom.c_in * geom.k * geom.k
-            n = dense.shape[-1]
-            dense = dense[:kk].reshape(geom.k, geom.k, geom.c_in, n)
-            dense = dense.transpose(2, 0, 1, 3).reshape(kk, n)
+            dense = kref.from_spatial_major(dense[:kk], geom.k, geom.c_in)
         elif "kdim" in w:              # linear leaf: strip the K%8 pad
             dense = dense[:w["kdim"].k]
         return dense
-    return w.get("codes", w.get("bs_codes", w.get("values")))
+    dense = w.get("codes", w.get("bs_codes", w.get("values")))
+    if geom is not None:               # dense conv leaf: spatial-major
+        dense = kref.from_spatial_major(dense, geom.k, geom.c_in)
+    return dense
 
 
 def _flatten_batch(x: jax.Array):
@@ -207,12 +212,12 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
             wv = fake_quant_int7(wv.astype(jnp.float32), axis=-1).astype(x.dtype)
         return jnp.matmul(x, wv.astype(x.dtype))
 
+    # compiled conv leaves are stored spatial-major (bitmap ones also
+    # K-padded) — silently wrong under a plain matmul; use apply_conv
+    assert "geom" not in w, "compiled conv leaf: use apply_conv"
     x2, lead = _flatten_batch(x)
     x_q, s_x = act_quant(x2)
     if "bitmap" in w:                              # sparse_cfmm
-        # conv bitmap leaves are spatial-major and K-padded — silently
-        # wrong under a plain matmul; they must go through apply_conv
-        assert "geom" not in w, "conv bitmap leaf: use apply_conv"
         from repro.kernels import ops
         acc = ops.sparse_cfmm_matmul(x_q, w["bitmap"], w["values"])
     elif "bs_codes" in w:                          # bitserial ablation
@@ -227,14 +232,16 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
 
 
 def conv_codes_of(w: dict):
-    """Dense int8 codes + per-channel scale of a compiled conv leaf.
+    """Dense *channel-major* int8 codes + per-channel scale of a compiled
+    conv leaf.
 
-    Oracle/debug seam only: bitmap leaves expand (and un-permute) through
-    ``packed_codes``.  The serving path never calls this for sparse_cfmm —
-    ``apply_conv`` dispatches the packed pair to the bitmap-native conv
-    kernel instead.  ``bs_codes`` (bit-serial ablation) are bit-exact
-    equal to plain codes as int8 operands, so they ride the MXU path too —
-    the bit-plane loop remains a linear-layer-only ablation.
+    Oracle/debug seam only: every conv leaf is stored spatial-major at
+    compile time (bitmap leaves additionally packed), and this un-permutes
+    (and expands) through ``packed_codes``.  The serving path never calls
+    it — ``apply_conv`` hands the stored bytes straight to the kernels.
+    ``bs_codes`` (bit-serial ablation) are bit-exact equal to plain codes
+    as int8 operands, so they ride the MXU path too — the bit-plane loop
+    remains a linear-layer-only ablation.
     """
     return packed_codes(w), w["scale"]
 
@@ -251,17 +258,20 @@ def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
     packed (bitmap, values) pair straight to the bitmap-native sparse conv
     kernel — no expansion at the op boundary, HBM sees ~2.6 bits/param at
     s=0.8 — everything else feeds the dense-codes implicit-GEMM kernel.
+    All conv leaves are stored in the kernels' spatial-major tap layout at
+    compile time, so NO layout shuffle happens here or in ``ops.conv2d``
+    (spy-tested in tests/test_conv.py).
     """
     geom = w["geom"]
     from repro.kernels import ops
     if "bitmap" in w:                  # sparse_cfmm: packed weights only
         codes = (w["bitmap"], w["values"])
-        w_scale = w["scale"]
     else:
-        codes, w_scale = conv_codes_of(w)
+        codes = w.get("values", w.get("codes", w.get("bs_codes")))
     return ops.conv2d(x_q, codes, geom.k, geom.stride, x_scale=x_scale,
-                      w_scale=w_scale, gamma=gamma, beta=beta,
-                      shortcut=shortcut, relu=relu, quant_out=quant_out)
+                      w_scale=w["scale"], gamma=gamma, beta=beta,
+                      shortcut=shortcut, relu=relu, quant_out=quant_out,
+                      w_layout="spatial")
 
 
 # ---------------------------------------------------------------------------
@@ -316,20 +326,26 @@ def _compile_leaf_2d(w: jax.Array, mode: str, sparsity: float,
         qt = balanced_prune_codes(w, keep_k)
         codes = qt.values
         if conv_k is not None:
-            # conv leaves pack in the kernel's spatial-major tap layout
+            # conv leaves pack in the kernels' spatial-major tap layout
             # (row = tap*c_in + c) so the packed pair feeds
             # kernels/conv_sparse.py with no boundary permute/expand
-            c_in = K // (conv_k * conv_k)
-            codes = codes.reshape(c_in, conv_k, conv_k, -1).transpose(
-                1, 2, 0, 3).reshape(K, -1)
+            codes = kref.to_spatial_major(codes, conv_k,
+                                          K // (conv_k * conv_k))
         # K % 8 != 0 (e.g. the 7x7 stem, K = 3*49 = 147): pad + mask
         # instead of the old silent dense fallback
         bitmap, values = bitmap_pack(pad_rows8(codes), keep_k)
         return {"bitmap": bitmap, "values": values,
                 "scale": qt.scale.reshape(1, -1)}
     qt = quantize_int7(w, axis=-1)
+    codes = qt.values
+    if conv_k is not None:
+        # dense conv leaves store spatial-major too: the one weight-layout
+        # shuffle runs here, at compile time, and ops.conv2d streams the
+        # stored bytes with zero call-time permutes (per-column scales are
+        # row-permutation-invariant, so the codes permute is free)
+        codes = kref.to_spatial_major(codes, conv_k, K // (conv_k * conv_k))
     key = {"int8": "values", "bitserial": "bs_codes"}.get(mode, "codes")
-    return {key: qt.values, "scale": qt.scale.reshape(1, -1)}
+    return {key: codes, "scale": qt.scale.reshape(1, -1)}
 
 
 def compile_params(params, mode: str = "sparse_cfmm", sparsity: float = 0.8):

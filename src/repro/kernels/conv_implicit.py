@@ -5,25 +5,30 @@ per conv layer: the Kernel is the int8 x int7 MACs, the Non-Kernel
 (Collector) — per-channel dequant, folded-BN scale, bias, shortcut add,
 ReLU, and the output-amax needed to round activations back to 8 bits — is
 fused into the epilogue.  The im2col patch tensor is never materialized
-in HBM: each grid cell holds one (padded) input image in VMEM and forms
-the k*k receptive-field taps *implicitly* as strided slices, issuing one
-MXU matmul per tap:
+in HBM: each grid cell holds a row strip of the (padded) input image in
+VMEM and forms the k*k receptive-field taps *implicitly* as strided
+slices, issuing one MXU matmul per tap:
 
     out[oh, ow, :] += x[oh*s + dy, ow*s + dx, :] @ w[dy, dx, :, :]
 
 so HBM activation traffic is 1 byte/input-pixel instead of the 4*k*k
 bytes/pixel of a materialized f32 patch tensor + separate-epilogue chain.
 
-Grid: (N, C_out/bn).  Weights arrive in spatial-major layout
-(k*k*c_in, c_out) so each tap's (c_in, bn) slab is a contiguous slice.
-The whole padded image lives in VMEM per grid cell — right-sized for the
-paper's ResNet50 feature maps (conv2_x at 56x56x256 int8 is ~0.8 MB;
-the 224x224 stem has c_in=3).  Row-strip tiling for larger images is an
-open item in ROADMAP.md.
+Grid: (N, n_strips, C_out/bn) — the paper's persistent line-buffer
+streaming as row-strip tiling (kernels/tiling.py).  Each cell holds a
+(slab_h, Wp, C) int8 slab, slab_h = (strip_h-1)*stride + k, read at an
+Unblocked row offset so consecutive strips overlap by their k-stride
+halo rows; the per-cell VMEM working set is bounded by the strip planner
+instead of growing with image height (7x7 maps degenerate to one strip —
+exactly the pre-tiling kernel).  Weights arrive in spatial-major layout
+(k*k*c_in, c_out), stored that way at compile time, so each tap's
+(c_in, bn) slab is a contiguous slice with no call-time permute.
 
-Outputs: f32 (N, m_pad, C_out) conv result plus a per-(image, channel
-tile) amax — max|y| reduced on-chip so the caller can requantize to int8
-without re-reading the f32 output (the quantization-domain pass).
+Outputs: f32 (N, n_strips*ms_pad, C_out) strip-blocked conv result plus a
+per-(image, strip, channel tile) amax — max|y| over the strip's valid
+rows, reduced on-chip so the caller can requantize to int8 without
+re-reading the f32 output (the quantization-domain pass); the caller
+max-reduces over strips, which equals the whole-image amax exactly.
 """
 from __future__ import annotations
 
@@ -33,12 +38,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import strip_geometry
+
 
 def conv_tap_macs(x, k, stride, h_out, w_out, n_cols, tap_weights,
                   carry=None):
     """Implicit-im2col MAC loop shared by the dense and bitmap-native
     sparse conv kernels: one strided VMEM slice + MXU matmul per tap, the
-    k*k loop unrolled at trace time (taps are static).
+    k*k loop unrolled at trace time (taps are static).  ``x`` is any
+    padded slab covering rows [0, (h_out-1)*stride + k) — a whole image
+    or one halo'd row strip; the loop is identical either way.
 
     ``tap_weights(tap, carry) -> ((C, n_cols) int8 slab, carry)`` supplies
     each tap's weight slab — a dense VMEM slice, or an on-chip bitmap
@@ -62,84 +71,108 @@ def conv_tap_macs(x, k, stride, h_out, w_out, n_cols, tap_weights,
 
 
 def collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref, *,
-                       m_out, m_pad, relu):
+                       m_out, m_pad, relu, valid_rows=None):
     """Fused Collector: dequant * BN-scale (one vector), bias, shortcut,
     ReLU, on-chip amax.  One implementation shared by both conv kernels,
-    so sparse and dense conv outputs are bit-identical by construction."""
+    so sparse and dense conv outputs are bit-identical by construction.
+
+    ``valid_rows`` masks the amax to the strip's real output rows: the
+    last strip of a tiled launch computes surplus rows from zero-padded
+    input (sliced off by the caller) whose bias/ReLU values must not leak
+    into the quantization scale.
+    """
     y = acc.astype(jnp.float32) * s_ref[...] + b_ref[...]
     if sc_ref is not None:
         y = y + sc_ref[0, :m_out, :]
     if relu:
         y = jnp.maximum(y, 0.0)
-    amax_ref[0, 0] = jnp.max(jnp.abs(y))
+    ay = jnp.abs(y)
+    if valid_rows is not None:
+        rows = jax.lax.broadcasted_iota(jnp.int32, ay.shape, 0)
+        ay = jnp.where(rows < valid_rows, ay, 0.0)
+    amax_ref[0, 0, 0] = jnp.max(ay)
     if m_pad > m_out:
         y = jnp.pad(y, ((0, m_pad - m_out), (0, 0)))
     out_ref[0] = y
 
 
-def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut):
+def _kernel(*refs, k, stride, strip_h, h_out, w_out, ms_pad, relu,
+            has_shortcut):
     if has_shortcut:
         x_ref, w_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
     else:
         x_ref, w_ref, s_ref, b_ref, out_ref, amax_ref = refs
         sc_ref = None
-    x = x_ref[0]                                   # (Hp, Wp, C) int8, VMEM
+    x = x_ref[0]                                # (slab_h, Wp, C) int8, VMEM
     C = x.shape[-1]
     tap_weights = lambda tap, carry: (w_ref[tap * C:(tap + 1) * C, :], carry)
-    acc = conv_tap_macs(x, k, stride, h_out, w_out, w_ref.shape[1],
+    acc = conv_tap_macs(x, k, stride, strip_h, w_out, w_ref.shape[1],
                         tap_weights)
+    valid = jnp.minimum(strip_h, h_out - pl.program_id(1) * strip_h) * w_out
     collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref,
-                       m_out=h_out * w_out, m_pad=m_pad, relu=relu)
+                       m_out=strip_h * w_out, m_pad=ms_pad, relu=relu,
+                       valid_rows=valid)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "stride", "h_out", "w_out", "bn", "relu", "interpret"))
+    "k", "stride", "h_out", "w_out", "bn", "strip_h", "relu", "interpret"))
 def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
                            eff_scale: jax.Array, eff_bias: jax.Array,
                            shortcut: jax.Array | None = None, *,
                            k: int, stride: int, h_out: int, w_out: int,
-                           bn: int = 128, relu: bool = True,
-                           interpret: bool = False):
-    """Fused implicit-GEMM conv.
+                           bn: int = 128, strip_h: int | None = None,
+                           relu: bool = True, interpret: bool = False):
+    """Fused row-strip-tiled implicit-GEMM conv.
 
-    x_pad:     (N, Hp, Wp, C) int8, already SAME-padded (ref.pad_same_nhwc)
-    w_sp:      (k*k*C, n_out) int8, spatial-major tap layout
+    x_pad:     (N, Hp, Wp, C) int8, SAME-padded (ref.pad_same_nhwc) and
+               bottom-padded with zero rows to the strip plan's x_rows
+    w_sp:      (k*k*C, n_out) int8, spatial-major tap layout (the
+               compile-time storage layout — no call-time permute)
     eff_scale: (1, n_out) f32 = s_x * w_scale * bn_scale (whole dequant+BN)
     eff_bias:  (1, n_out) f32
-    shortcut:  optional (N, m_pad, n_out) f32, m_pad = h_out*w_out rounded
-               up to a sublane multiple
-    Returns (y, amax): y f32 (N, m_pad, n_out); amax f32 (N, n_out/bn)
-    per-(image, channel-tile) max|y| for the int8 requantization pass.
+    shortcut:  optional (N, n_strips*ms_pad, n_out) f32, strip-blocked
+               (each strip's strip_h*w_out rows padded to ms_pad)
+    strip_h:   output rows per strip; None = one whole-image strip
+    Returns (y, amax): y f32 (N, n_strips*ms_pad, n_out) strip-blocked;
+    amax f32 (N, n_strips, n_out/bn) per-(image, strip, channel-tile)
+    max|y| over valid rows for the int8 requantization pass.
     """
     N, Hp, Wp, C = x_pad.shape
     KK, n_out = w_sp.shape
     assert KK == k * k * C and n_out % bn == 0, ((KK, k, C), (n_out, bn))
-    assert Hp >= (h_out - 1) * stride + k and Wp >= (w_out - 1) * stride + k
-    m_out = h_out * w_out
-    m_pad = -(-m_out // 8) * 8
+    g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
+                       strip_h=strip_h if strip_h is not None else h_out)
+    assert Hp >= g.x_rows and Wp >= (w_out - 1) * stride + k, \
+        ((Hp, Wp), g.x_rows)
     n_j = n_out // bn
-    kern = functools.partial(_kernel, k=k, stride=stride, h_out=h_out,
-                             w_out=w_out, m_pad=m_pad, relu=relu,
-                             has_shortcut=shortcut is not None)
+    kern = functools.partial(_kernel, k=k, stride=stride, strip_h=g.strip_h,
+                             h_out=h_out, w_out=w_out, ms_pad=g.ms_pad,
+                             relu=relu, has_shortcut=shortcut is not None)
     in_specs = [
-        pl.BlockSpec((1, Hp, Wp, C), lambda n, j: (n, 0, 0, 0)),
-        pl.BlockSpec((KK, bn), lambda n, j: (0, j)),
-        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
-        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
+        # overlapping halo'd slabs: Unblocked = element-offset indexing
+        pl.BlockSpec((1, g.slab_h, Wp, C),
+                     lambda n, s, j: (n, s * g.row_step, 0, 0),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((KK, bn), lambda n, s, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
     ]
     args = [x_pad, w_sp, eff_scale, eff_bias]
     if shortcut is not None:
-        assert shortcut.shape == (N, m_pad, n_out), shortcut.shape
-        in_specs.append(pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)))
+        assert shortcut.shape == (N, g.n_strips * g.ms_pad, n_out), \
+            (shortcut.shape, g)
+        in_specs.append(
+            pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)))
         args.append(shortcut.astype(jnp.float32))
     y, amax = pl.pallas_call(
         kern,
-        grid=(N, n_j),
+        grid=(N, g.n_strips, n_j),
         in_specs=in_specs,
-        out_specs=[pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)),
-                   pl.BlockSpec((1, 1), lambda n, j: (n, j))],
-        out_shape=[jax.ShapeDtypeStruct((N, m_pad, n_out), jnp.float32),
-                   jax.ShapeDtypeStruct((N, n_j), jnp.float32)],
+        out_specs=[pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)),
+                   pl.BlockSpec((1, 1, 1), lambda n, s, j: (n, s, j))],
+        out_shape=[jax.ShapeDtypeStruct((N, g.n_strips * g.ms_pad, n_out),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((N, g.n_strips, n_j), jnp.float32)],
         interpret=interpret,
     )(*args)
     return y, amax

@@ -13,8 +13,9 @@ Format (core.compiled_linear.compile_params, conv leaves, sparse_cfmm):
   bitmap-packed column-wise:
     bitmap (K_pad/8, c_out) uint8, values (keep_k, c_out) int8.
 
-Kernel: grid (N, c_out/bn), identical to conv_implicit.  Per grid cell
-the packed slab streams HBM->VMEM and expands via the shared
+Kernel: grid (N, n_strips, c_out/bn), identical to conv_implicit — the
+input streams as halo'd row strips (kernels/tiling.py) while the packed
+weight slab is re-read per cell and expands via the shared
 `kernels.bitmap.expand_bitmap_tile`:
 
 * c_in % 8 == 0 — expand *per k-tap tile*, fused with the MAC: each tap's
@@ -25,11 +26,11 @@ the packed slab streams HBM->VMEM and expands via the shared
   slices it; still VMEM-only.
 
 The MAC loop and the Collector epilogue (dequant * folded-BN scale, bias,
-shortcut, ReLU, on-chip amax for the quantization-domain pass) are
-*shared code* with `conv_implicit.py` (`conv_tap_macs` /
+shortcut, ReLU, on-chip per-strip amax for the quantization-domain pass)
+are *shared code* with `conv_implicit.py` (`conv_tap_macs` /
 `collector_epilogue`) — only the tap-weight sourcing differs — so sparse
 and dense conv outputs are bit-identical for identical (expanded) codes
-by construction.
+by construction, tiled or not.
 """
 from __future__ import annotations
 
@@ -41,16 +42,17 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.bitmap import expand_bitmap_tile
 from repro.kernels.conv_implicit import collector_epilogue, conv_tap_macs
+from repro.kernels.tiling import strip_geometry
 
 
-def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut,
-            c_in, keep_k):
+def _kernel(*refs, k, stride, strip_h, h_out, w_out, ms_pad, relu,
+            has_shortcut, c_in, keep_k):
     if has_shortcut:
         x_ref, bm_ref, val_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
     else:
         x_ref, bm_ref, val_ref, s_ref, b_ref, out_ref, amax_ref = refs
         sc_ref = None
-    x = x_ref[0]                                   # (Hp, Wp, C) int8, VMEM
+    x = x_ref[0]                                # (slab_h, Wp, C) int8, VMEM
     C = x.shape[-1]
     bn = out_ref.shape[2]
     vals = val_ref[...]
@@ -70,29 +72,32 @@ def _kernel(*refs, k, stride, h_out, w_out, m_pad, relu, has_shortcut,
             return jax.lax.slice(w_dense, (tap * C, 0),
                                  ((tap + 1) * C, bn)), carry
         carry = None
-    acc = conv_tap_macs(x, k, stride, h_out, w_out, bn, tap_weights, carry)
+    acc = conv_tap_macs(x, k, stride, strip_h, w_out, bn, tap_weights, carry)
+    valid = jnp.minimum(strip_h, h_out - pl.program_id(1) * strip_h) * w_out
     collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref,
-                       m_out=h_out * w_out, m_pad=m_pad, relu=relu)
+                       m_out=strip_h * w_out, m_pad=ms_pad, relu=relu,
+                       valid_rows=valid)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "stride", "h_out", "w_out", "bn", "relu", "interpret"))
+    "k", "stride", "h_out", "w_out", "bn", "strip_h", "relu", "interpret"))
 def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
                          values: jax.Array, eff_scale: jax.Array,
                          eff_bias: jax.Array,
                          shortcut: jax.Array | None = None, *,
                          k: int, stride: int, h_out: int, w_out: int,
-                         bn: int = 128, relu: bool = True,
-                         interpret: bool = False):
-    """Fused bitmap-native implicit-GEMM sparse conv.
+                         bn: int = 128, strip_h: int | None = None,
+                         relu: bool = True, interpret: bool = False):
+    """Fused bitmap-native row-strip-tiled implicit-GEMM sparse conv.
 
-    x_pad:     (N, Hp, Wp, C) int8, already SAME-padded (ref.pad_same_nhwc)
+    x_pad:     (N, Hp, Wp, C) int8, SAME-padded (ref.pad_same_nhwc) and
+               bottom-padded with zero rows to the strip plan's x_rows
     bitmap:    (K_pad/8, n_out) uint8, spatial-major taps, K_pad =
                k*k*C rounded up to a multiple of 8 (zero-masked tail)
     values:    (keep_k, n_out) int8 nonzero codes, ascending-row order
     eff_scale: (1, n_out) f32 = s_x * w_scale * bn_scale; eff_bias ditto
-    shortcut:  optional (N, m_pad, n_out) f32, m_pad = h_out*w_out rounded
-               up to a sublane multiple
+    shortcut:  optional (N, n_strips*ms_pad, n_out) f32, strip-blocked
+    strip_h:   output rows per strip; None = one whole-image strip
     Returns (y, amax) exactly as conv2d_implicit_pallas.
     """
     N, Hp, Wp, C = x_pad.shape
@@ -100,34 +105,41 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
     keep_k = values.shape[0]
     assert Kb8 * 8 == -(-k * k * C // 8) * 8, (Kb8, k, C)
     assert n_out % bn == 0 and values.shape[1] == n_out, (n_out, bn)
-    assert Hp >= (h_out - 1) * stride + k and Wp >= (w_out - 1) * stride + k
-    m_out = h_out * w_out
-    m_pad = -(-m_out // 8) * 8
+    g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
+                       strip_h=strip_h if strip_h is not None else h_out)
+    assert Hp >= g.x_rows and Wp >= (w_out - 1) * stride + k, \
+        ((Hp, Wp), g.x_rows)
     n_j = n_out // bn
-    kern = functools.partial(_kernel, k=k, stride=stride, h_out=h_out,
-                             w_out=w_out, m_pad=m_pad, relu=relu,
-                             has_shortcut=shortcut is not None,
+    kern = functools.partial(_kernel, k=k, stride=stride, strip_h=g.strip_h,
+                             h_out=h_out, w_out=w_out, ms_pad=g.ms_pad,
+                             relu=relu, has_shortcut=shortcut is not None,
                              c_in=C, keep_k=keep_k)
     in_specs = [
-        pl.BlockSpec((1, Hp, Wp, C), lambda n, j: (n, 0, 0, 0)),
-        pl.BlockSpec((Kb8, bn), lambda n, j: (0, j)),
-        pl.BlockSpec((keep_k, bn), lambda n, j: (0, j)),
-        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
-        pl.BlockSpec((1, bn), lambda n, j: (0, j)),
+        # overlapping halo'd slabs: Unblocked = element-offset indexing
+        pl.BlockSpec((1, g.slab_h, Wp, C),
+                     lambda n, s, j: (n, s * g.row_step, 0, 0),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((Kb8, bn), lambda n, s, j: (0, j)),
+        pl.BlockSpec((keep_k, bn), lambda n, s, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
+        pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
     ]
     args = [x_pad, bitmap, values, eff_scale, eff_bias]
     if shortcut is not None:
-        assert shortcut.shape == (N, m_pad, n_out), shortcut.shape
-        in_specs.append(pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)))
+        assert shortcut.shape == (N, g.n_strips * g.ms_pad, n_out), \
+            (shortcut.shape, g)
+        in_specs.append(
+            pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)))
         args.append(shortcut.astype(jnp.float32))
     y, amax = pl.pallas_call(
         kern,
-        grid=(N, n_j),
+        grid=(N, g.n_strips, n_j),
         in_specs=in_specs,
-        out_specs=[pl.BlockSpec((1, m_pad, bn), lambda n, j: (n, 0, j)),
-                   pl.BlockSpec((1, 1), lambda n, j: (n, j))],
-        out_shape=[jax.ShapeDtypeStruct((N, m_pad, n_out), jnp.float32),
-                   jax.ShapeDtypeStruct((N, n_j), jnp.float32)],
+        out_specs=[pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)),
+                   pl.BlockSpec((1, 1, 1), lambda n, s, j: (n, s, j))],
+        out_shape=[jax.ShapeDtypeStruct((N, g.n_strips * g.ms_pad, n_out),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((N, g.n_strips, n_j), jnp.float32)],
         interpret=interpret,
     )(*args)
     return y, amax

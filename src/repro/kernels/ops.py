@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ref, tiling
 
 
 def _mode() -> str:
@@ -47,12 +47,18 @@ def cfmm_matmul(x_q: jax.Array, codes: jax.Array,
     M, K = x_q.shape
     N = codes.shape[1]
     bm = 128 if M >= 128 else max(8, 1 << (M - 1).bit_length())
-    bk = min(512, K) if K % 512 == 0 else _largest_tile(K, 512)
-    bn = 128 if N % 128 == 0 else _largest_tile(N, 128)
+    bk, k_pad = _tile_pad(K, 512)
+    bn, n_pad = _tile_pad(N, 128)
     xp, _ = _pad_to(x_q, 0, bm)
     s = scale if scale is not None else jnp.ones((1, N), jnp.float32)
+    if k_pad > K:                  # zero rows/cols: exact under int8 matmul
+        xp = jnp.pad(xp, ((0, 0), (0, k_pad - K)))
+        codes = jnp.pad(codes, ((0, k_pad - K), (0, 0)))
+    if n_pad > N:
+        codes = jnp.pad(codes, ((0, 0), (0, n_pad - N)))
+        s = jnp.pad(s, ((0, 0), (0, n_pad - N)))
     out = cfmm_matmul_pallas(xp, codes, s, bm=bm, bn=bn, bk=bk,
-                             interpret=interpret)[:M]
+                             interpret=interpret)[:M, :N]
     if scale is None:
         return out.astype(jnp.int32)
     return out
@@ -63,6 +69,23 @@ def _largest_tile(dim: int, cap: int) -> int:
         if dim % t == 0:
             return t
     return 1
+
+
+def _tile_pad(dim: int, cap: int) -> tuple[int, int]:
+    """(tile, padded_dim) for a lane-tiled axis: one tile when the axis
+    fits the cap, else the largest clean divisor.  When an awkward axis
+    would degrade toward one grid cell per element — the old
+    ``_largest_tile`` pathology: a prime gives tile 1, and 8*prime a
+    sliver tile of 8 — pad the axis to the next cap multiple instead and
+    let the caller slice the result; zero pad rows/columns are exact
+    under int8 matmul.  A divisor tile is kept only when it is both a
+    sublane multiple and a reasonable fraction (>= 1/4) of the cap."""
+    if dim <= cap:
+        return dim, dim
+    t = _largest_tile(dim, cap)
+    if t % 8 == 0 and t >= cap // 4:
+        return t, dim
+    return cap, -(-dim // cap) * cap
 
 
 def sparse_cfmm_matmul(x_q: jax.Array, bitmap: jax.Array,
@@ -85,13 +108,17 @@ def sparse_cfmm_matmul(x_q: jax.Array, bitmap: jax.Array,
     interpret = mode == "interpret"
     M, K = x_q.shape
     N = bitmap.shape[1]
-    bn = 128 if N % 128 == 0 else _largest_tile(N, 128)
+    bn, n_pad = _tile_pad(N, 128)
     k_chunk = _largest_tile(K, 1024)
     if k_chunk % 8 != 0:
         k_chunk = K  # single chunk fallback
     s = scale if scale is not None else jnp.ones((1, N), jnp.float32)
+    if n_pad > N:                  # zero bitmap bytes expand to zero codes
+        bitmap = jnp.pad(bitmap, ((0, 0), (0, n_pad - N)))
+        values = jnp.pad(values, ((0, 0), (0, n_pad - N)))
+        s = jnp.pad(s, ((0, 0), (0, n_pad - N)))
     out = sparse_matvec_pallas(x_q, bitmap, values, s, bn=bn,
-                               k_chunk=k_chunk, interpret=interpret)
+                               k_chunk=k_chunk, interpret=interpret)[:, :N]
     if scale is None:
         return out.astype(jnp.int32)
     return out
@@ -136,16 +163,32 @@ def block_sparse_matmul(x: jax.Array, w: jax.Array,
     return jnp.where(jnp.asarray(col_has_work)[None, :], out, 0)
 
 
+def _strip_blocked(sc_flat: jax.Array, plan, n_pad: int) -> jax.Array:
+    """(N, m_out, n_out) f32 -> the tiled kernels' strip-blocked layout
+    (N, n_strips*ms_pad, n_pad): each strip's ms rows padded to the
+    sublane multiple (and channels to the lane tile) with zeros."""
+    N, m_out, n_out = sc_flat.shape
+    sc = jnp.pad(sc_flat, ((0, 0), (0, plan.n_strips * plan.ms - m_out),
+                           (0, n_pad - n_out)))
+    sc = sc.reshape(N, plan.n_strips, plan.ms, n_pad)
+    sc = jnp.pad(sc, ((0, 0), (0, 0), (0, plan.ms_pad - plan.ms), (0, 0)))
+    return sc.reshape(N, plan.n_strips * plan.ms_pad, n_pad)
+
+
 def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
            x_scale, w_scale: jax.Array, gamma: jax.Array | None = None,
            beta: jax.Array | None = None, shortcut: jax.Array | None = None,
-           relu: bool = True, quant_out: bool = False):
-    """Fused implicit-GEMM int8 SAME conv + Collector epilogue.
+           relu: bool = True, quant_out: bool = False,
+           w_layout: str = "channel", strip_h: int | None = None):
+    """Fused row-strip-tiled implicit-GEMM int8 SAME conv + Collector.
 
     x_q:     (N, H, W, c_in) int8 activations, x_scale their scalar scale
-    codes:   (c_in*k*k, c_out) int8 constant weight codes in patch
-             (channel-major) order — the layout ``compile_params`` stores
-             — OR a packed ``(bitmap, values)`` pair in the spatial-major
+    codes:   (c_in*k*k, c_out) int8 constant weight codes — in im2col
+             patch (channel-major) order by default, or the compiled
+             spatial-major tap order with ``w_layout="spatial"`` (what
+             ``compile_params`` stores for every dense conv leaf, so the
+             serving path pays zero call-time layout shuffles) — OR a
+             packed ``(bitmap, values)`` pair in the spatial-major
              bitmap-native layout (kernels/conv_sparse.py): the
              sparse_cfmm fast path, where packed bytes reach the kernel
              and the dense weight never exists outside VMEM
@@ -155,6 +198,11 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     quant_out:  round the output back to int8 (paper: "saturated and
                 rounded to 8 bits") -> returns (y_q int8, y_scale);
                 otherwise returns f32 (N, h_out, w_out, c_out).
+    strip_h: row-strip override (tests/benchmarks force awkward strip
+             boundaries); None lets kernels/tiling.py pick the largest
+             strip whose VMEM working set fits the budget.  Tiled and
+             untiled outputs are bit-identical; the jnp lowering only
+             loops strips when strip_h is forced.
 
     Lowering follows REPRO_PALLAS like every op here: the jnp reference on
     CPU, the Pallas implicit-GEMM kernel on TPU / in interpret mode.
@@ -177,37 +225,69 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     eff_bias = (jnp.zeros((n_out,), jnp.float32) if beta is None
                 else beta.astype(jnp.float32))
     if mode == "jnp":
-        if packed:
+        if strip_h is not None:
+            y = ref.conv2d_collector_strips_ref(
+                x_q, codes, k, stride, strip_h, eff_scale, eff_bias,
+                shortcut, relu, layout=w_layout)
+        elif packed:
             y = ref.conv2d_sparse_collector_ref(
                 x_q, bitmap, values, k, stride, eff_scale, eff_bias,
                 shortcut, relu)
         else:
             y = ref.conv2d_collector_ref(x_q, codes, k, stride, eff_scale,
-                                         eff_bias, shortcut, relu)
+                                         eff_bias, shortcut, relu,
+                                         layout=w_layout)
         amax_of = lambda: jnp.max(jnp.abs(y))
     else:
         xp, h_out, w_out = ref.pad_same_nhwc(x_q, k, stride)
-        m_out, m_pad = h_out * w_out, -(-h_out * w_out // 8) * 8
-        bn = 128 if n_out % 128 == 0 else _largest_tile(n_out, 128)
+        m_out = h_out * w_out
+        bn, n_pad = _tile_pad(n_out, 128)
+        if n_pad > n_out:          # awkward channel count: zero-pad + slice
+            if packed:
+                bitmap = jnp.pad(bitmap, ((0, 0), (0, n_pad - n_out)))
+                values = jnp.pad(values, ((0, 0), (0, n_pad - n_out)))
+            else:
+                codes = jnp.pad(codes, ((0, 0), (0, n_pad - n_out)))
+            eff_scale = jnp.pad(eff_scale, (0, n_pad - n_out))
+            eff_bias = jnp.pad(eff_bias, (0, n_pad - n_out))
+        if packed:                 # per-cell weight slab for the planner:
+            weight_bytes = (bitmap.shape[0] + values.shape[0]) * bn
+            if C % 8 != 0:         # + the one-shot expanded slab (stem)
+                weight_bytes += bitmap.shape[0] * 8 * bn
+        else:
+            weight_bytes = k * k * C * bn
+        plan = tiling.plan_strips(k=k, stride=stride, h_out=h_out,
+                                  w_out=w_out, wp=xp.shape[2], c_in=C,
+                                  bn=bn, weight_bytes=weight_bytes,
+                                  has_shortcut=shortcut is not None,
+                                  strip_h=strip_h)
+        if xp.shape[1] < plan.x_rows:  # zero rows for the last strip's slab
+            xp = jnp.pad(xp, ((0, 0), (0, plan.x_rows - xp.shape[1]),
+                              (0, 0), (0, 0)))
         sc = None
         if shortcut is not None:
-            sc = shortcut.astype(jnp.float32).reshape(N, m_out, n_out)
-            sc = jnp.pad(sc, ((0, 0), (0, m_pad - m_out), (0, 0)))
+            sc = _strip_blocked(
+                shortcut.astype(jnp.float32).reshape(N, m_out, n_out),
+                plan, n_pad)
         kw = dict(k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
-                  relu=relu, interpret=(mode == "interpret"))
+                  strip_h=plan.strip_h, relu=relu,
+                  interpret=(mode == "interpret"))
         if packed:
             from repro.kernels.conv_sparse import conv2d_sparse_pallas
             y_flat, _amax = conv2d_sparse_pallas(
-                xp, bitmap, values, eff_scale.reshape(1, n_out),
-                eff_bias.reshape(1, n_out), sc, **kw)
+                xp, bitmap, values, eff_scale.reshape(1, n_pad),
+                eff_bias.reshape(1, n_pad), sc, **kw)
         else:
             from repro.kernels.conv_implicit import conv2d_implicit_pallas
-            w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
+            if w_layout == "channel":  # pre-compile codes pay the permute
+                codes = ref.to_spatial_major(codes, k, C)
             y_flat, _amax = conv2d_implicit_pallas(
-                xp, w_sp.reshape(k * k * C, n_out),
-                eff_scale.reshape(1, n_out), eff_bias.reshape(1, n_out),
-                sc, **kw)
-        y = y_flat[:, :m_out, :].reshape(N, h_out, w_out, n_out)
+                xp, codes, eff_scale.reshape(1, n_pad),
+                eff_bias.reshape(1, n_pad), sc, **kw)
+        y = y_flat.reshape(N, plan.n_strips, plan.ms_pad, n_pad)[
+            :, :, :plan.ms, :n_out]
+        y = y.reshape(N, plan.n_strips * plan.ms, n_out)[:, :m_out]
+        y = y.reshape(N, h_out, w_out, n_out)
         amax_of = lambda: jnp.max(_amax)   # reduced on-chip in the epilogue
     if not quant_out:
         return y

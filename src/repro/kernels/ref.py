@@ -64,6 +64,44 @@ def block_sparse_matmul_ref(x: jax.Array, w_blocks: jax.Array,
 # Convolution (implicit-GEMM oracle + the materializing im2col baseline)
 # ---------------------------------------------------------------------------
 
+def to_spatial_major(codes: jax.Array, k: int, c_in: int) -> jax.Array:
+    """Channel-major patch codes (c_in*k*k, n) -> spatial-major tap order
+    (k*k*c_in, n), row = tap*c_in + c — the layout the conv kernels'
+    tap loop consumes as contiguous (c_in, bn) slabs.
+
+    The ONLY conv weight-layout shuffle in the codebase: `compile_params`
+    runs it once at compile time for every dense conv leaf (as the bitmap
+    packer already did), so `ops.conv2d` pays zero per-call permutes on
+    the serving path (spy-tested in tests/test_conv.py).
+    """
+    n = codes.shape[-1]
+    return codes.reshape(c_in, k, k, n).transpose(1, 2, 0, 3).reshape(
+        k * k * c_in, n)
+
+
+def from_spatial_major(codes_sp: jax.Array, k: int, c_in: int) -> jax.Array:
+    """Inverse of ``to_spatial_major`` — oracle/debug seam only
+    (`compiled_linear.packed_codes`), never on the serving hot path."""
+    n = codes_sp.shape[-1]
+    return codes_sp.reshape(k, k, c_in, n).transpose(2, 0, 1, 3).reshape(
+        k * k * c_in, n)
+
+
+def _w_sp4(codes: jax.Array, k: int, c_in: int, layout: str) -> jax.Array:
+    """(k, k, c_in, n) tap-indexed weight view of flat conv codes.
+
+    layout="spatial" (the compiled storage layout) is a pure reshape;
+    layout="channel" (raw quantized codes in im2col patch order) pays the
+    one permute through ``to_spatial_major``.
+    """
+    n = codes.shape[-1]
+    if layout == "channel":
+        codes = to_spatial_major(codes, k, c_in)
+    else:
+        assert layout == "spatial", layout
+    return codes.reshape(k, k, c_in, n)
+
+
 def same_pads(size: int, k: int, stride: int):
     """SAME-padding (lo, hi) and output size along one spatial dim."""
     out = -(-size // stride)
@@ -129,16 +167,16 @@ def _conv_taps_spatial(xp: jax.Array, w_sp: jax.Array, k: int, stride: int,
 
 
 def conv2d_int8_ref(x_q: jax.Array, codes: jax.Array, k: int,
-                    stride: int) -> jax.Array:
+                    stride: int, layout: str = "channel") -> jax.Array:
     """int8 NHWC conv -> int32 (exact): shift-slice matmuls, no im2col.
 
-    codes: (c_in*k*k, c_out) int8 in patch (channel-major) order.
+    codes: (c_in*k*k, c_out) int8 — patch (channel-major) order by
+    default, or the compiled spatial-major tap order with
+    layout="spatial" (a free reshape, no permute).
     """
     N, _, _, C = x_q.shape
-    n_out = codes.shape[1]
     xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
-    # spatial-major weight view: tap (dy, dx) -> contiguous (C, n_out) slab
-    w_sp = codes.reshape(C, k, k, n_out).transpose(1, 2, 0, 3)
+    w_sp = _w_sp4(codes, k, C, layout)
     return _conv_taps_spatial(xp, w_sp, k, stride, h_out, w_out)
 
 
@@ -168,14 +206,57 @@ def conv2d_sparse_int8_ref(x_q: jax.Array, bitmap: jax.Array,
 def conv2d_collector_ref(x_q: jax.Array, codes: jax.Array, k: int,
                          stride: int, eff_scale: jax.Array,
                          eff_bias: jax.Array, shortcut=None,
-                         relu: bool = True) -> jax.Array:
+                         relu: bool = True,
+                         layout: str = "channel") -> jax.Array:
     """Fused conv + Collector oracle: dequant/BN scale, bias, shortcut, ReLU.
 
     eff_scale = s_x * w_scale * bn_scale and eff_bias = bias, both (c_out,)
     broadcastable — the whole Non-Kernel epilogue as two vectors.
     """
-    acc = conv2d_int8_ref(x_q, codes, k, stride)
+    acc = conv2d_int8_ref(x_q, codes, k, stride, layout)
     return _collector(acc, eff_scale, eff_bias, shortcut, relu)
+
+
+def conv2d_collector_strips_ref(x_q: jax.Array, codes, k: int, stride: int,
+                                strip_h: int, eff_scale: jax.Array,
+                                eff_bias: jax.Array, shortcut=None,
+                                relu: bool = True,
+                                layout: str = "spatial") -> jax.Array:
+    """Row-strip-tiled jnp lowering of the fused conv (dense codes or the
+    packed ``(bitmap, values)`` pair): loops the exact halo'd slabs the
+    Pallas grid iterates (kernels/tiling.py), so the strip decomposition
+    itself is testable in pure jnp — bit-identical to the untiled oracle
+    by construction, since each output row sees the same input rows and
+    the same per-tap MAC order.
+    """
+    from repro.kernels.tiling import strip_geometry
+    N, _, _, C = x_q.shape
+    if isinstance(codes, (tuple, list)):           # bitmap-packed weights
+        from repro.kernels.bitmap import expand_bitmap_tile
+        bitmap, values = codes
+        n_out = bitmap.shape[1]
+        dense, _ = expand_bitmap_tile(
+            bitmap, values, jnp.zeros((1, n_out), jnp.int32),
+            values.shape[0])
+        w_sp = dense[:C * k * k].reshape(k, k, C, n_out)
+    else:
+        w_sp = _w_sp4(codes, k, C, layout)
+    xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
+    g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
+                       strip_h=strip_h)
+    if xp.shape[1] < g.x_rows:                     # zero rows: exact int8
+        xp = jnp.pad(xp, ((0, 0), (0, g.x_rows - xp.shape[1]),
+                          (0, 0), (0, 0)))
+    strips = []
+    for s in range(g.n_strips):
+        rows = min(g.strip_h, h_out - s * g.strip_h)
+        slab = jax.lax.slice_in_dim(xp, s * g.row_step,
+                                    s * g.row_step + g.slab_h, axis=1)
+        acc = _conv_taps_spatial(slab, w_sp, k, stride, rows, w_out)
+        sc = (None if shortcut is None
+              else shortcut[:, s * g.strip_h:s * g.strip_h + rows])
+        strips.append(_collector(acc, eff_scale, eff_bias, sc, relu))
+    return jnp.concatenate(strips, axis=1)
 
 
 def conv2d_sparse_collector_ref(x_q: jax.Array, bitmap: jax.Array,

@@ -1,0 +1,103 @@
+"""Row-strip planner for the conv kernels (DESIGN.md §3, §6).
+
+The paper's persistent design streams feature maps through fixed on-chip
+buffers; the Pallas analogue bounds the per-grid-cell VMEM working set by
+tiling the conv over *row strips with a k−1-row halo* instead of parking
+one whole padded image in VMEM.  The grid grows from `(N, c_out/bn)` to
+`(N, n_strips, c_out/bn)`, throughput becomes independent of image
+height, and each cell holds only
+
+    x slab   (slab_h, Wp, c_in) int8,  slab_h = (strip_h−1)·stride + k
+    weights  one c_out tile of constant codes (dense or bitmap-packed)
+    acc/y    (strip_h·w_out, bn) int32 / f32 (+ shortcut f32 if present)
+
+Strip s reads padded input rows `[s·strip_h·stride, s·strip_h·stride +
+slab_h)` — consecutive strips overlap by the `k − stride` halo rows — and
+owns output rows `[s·strip_h, (s+1)·strip_h)`.  Because every output row
+depends only on input rows inside its strip's slab, the tiled conv is
+bit-identical to the untiled one by construction; the last strip may run
+past `h_out` (the caller pads the input with zero rows, exact for int8)
+and its surplus rows are masked out of the on-chip amax and sliced off
+after the launch.
+
+``plan_strips`` picks the largest ``strip_h`` whose working set fits a
+VMEM budget; 7×7-map layers (conv5_x) degenerate to a single strip, i.e.
+exactly the pre-tiling kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Per-grid-cell working-set budget.  VMEM is ~16 MB/core; 1 MiB per cell
+# leaves room for double-buffered input/weight streams and keeps several
+# (n, strip, c_out-tile) cells in flight.  The 224×224 k=7 stem's
+# whole-image working set (dominated by the 112×112-row accumulator)
+# shrinks well over 4× under it (tracked in BENCH_conv.json).
+DEFAULT_VMEM_BUDGET = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class StripPlan:
+    """Static row-strip geometry (plus working-set accounting) for one
+    conv launch."""
+
+    strip_h: int     # output rows per strip
+    n_strips: int    # ceil(h_out / strip_h)
+    slab_h: int      # input rows resident per cell = (strip_h-1)*stride + k
+    row_step: int    # input-row stride between strips = strip_h * stride
+    ms: int          # output elements per strip = strip_h * w_out
+    ms_pad: int      # ms rounded up to the f32 sublane multiple (8)
+    x_rows: int      # padded-input rows the kernel reads overall
+    x_bytes: int = 0     # int8 activation slab bytes per cell
+    cell_bytes: int = 0  # slab + weight tile + acc/y (+shortcut) bytes
+
+
+def strip_geometry(*, k: int, stride: int, h_out: int, w_out: int,
+                   strip_h: int) -> StripPlan:
+    """Pure strip geometry for a given strip_h (no budget accounting) —
+    what the Pallas kernels and the strip-looped jnp lowering share."""
+    strip_h = max(1, min(strip_h, h_out))
+    n_strips = -(-h_out // strip_h)
+    slab_h = (strip_h - 1) * stride + k
+    ms = strip_h * w_out
+    return StripPlan(
+        strip_h=strip_h, n_strips=n_strips, slab_h=slab_h,
+        row_step=strip_h * stride, ms=ms, ms_pad=-(-ms // 8) * 8,
+        x_rows=(n_strips - 1) * strip_h * stride + slab_h)
+
+
+def plan_strips(*, k: int, stride: int, h_out: int, w_out: int, wp: int,
+                c_in: int, bn: int, weight_bytes: int,
+                has_shortcut: bool = False,
+                budget: int = DEFAULT_VMEM_BUDGET,
+                strip_h: int | None = None) -> StripPlan:
+    """Pick output-rows-per-strip from the VMEM budget.
+
+    Cell working set = `slab_h·Wp·c_in` (int8 x slab) + ``weight_bytes``
+    (one c_out-tile of constant codes, packed or dense) + `ms_pad·bn·4`
+    for each of the int32 accumulator, the f32 y tile, and — when present
+    — the f32 shortcut tile.  Returns the largest ``strip_h ≤ h_out``
+    that fits, degenerating to one strip when the whole image fits (7×7
+    maps) and to single-row strips when even those exceed the budget.
+    ``strip_h`` overrides the search (tests / benchmarks force awkward
+    strip boundaries).
+    """
+    wp_c = wp * c_in
+
+    def plan_of(sh: int) -> StripPlan:
+        g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
+                           strip_h=sh)
+        acc_y = g.ms_pad * bn * 4 * (3 if has_shortcut else 2)
+        return dataclasses.replace(
+            g, x_bytes=g.slab_h * wp_c,
+            cell_bytes=g.slab_h * wp_c + weight_bytes + acc_y)
+
+    if strip_h is not None:
+        return plan_of(strip_h)
+    best = plan_of(1)
+    for sh in range(2, h_out + 1):
+        cand = plan_of(sh)
+        if cand.cell_bytes > budget:
+            break
+        best = cand
+    return best

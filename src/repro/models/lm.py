@@ -441,7 +441,24 @@ def _whisper_forward(params, batch, cfg, qat=False, cache=None):
 
 
 def forward_prefill(params, batch, cfg: ArchConfig, cache):
-    """Prompt ingestion: returns (last-token logits, filled cache)."""
+    """Prompt ingestion: returns (last-token logits, filled cache).
+
+    ``batch`` may carry a ``length`` (B,) int32 of true prompt lengths
+    alongside ``tokens`` end-padded to a bucketed width (the serving
+    engine pads to powers of two so one compiled program serves a whole
+    length bucket).  Causal attention makes the pad suffix invisible to
+    every real position, so the bucketed prefill is exact when all rows
+    share one length — the engine's path, which prefills one request
+    (B=1) at a time: logits are gathered at position length-1 and every
+    cache length counter is rewound to the true length, which decode
+    masking then honors.  The attention caches keep a batch-shared
+    SCALAR length counter (per-row lengths live in ``pos``), so a B>1
+    call with heterogeneous lengths rewinds to max(length) and shorter
+    rows would still see their pad KV — don't do that.  Likewise only
+    attention mixers are rewindable: pad tokens advance mamba/rwkv
+    recurrent scan states, so recurrent stacks must prefill unpadded
+    (the engine gates bucketing on attention-only ``layer_sigs``).
+    """
     if cfg.encoder_decoder:
         return _whisper_prefill(params, batch, cfg, cache)
     tokens = batch["tokens"]
@@ -454,9 +471,33 @@ def forward_prefill(params, batch, cfg: ArchConfig, cache):
     info = _grouping_info(cfg)
     x, new_cache, _ = _run_stack(params, x, cfg, info, positions,
                                  cache=cache, decode=False)
-    new_cache["pos"] = jnp.full((B,), T, jnp.int32)
-    logits = _logits(params, x[:, -1:], cfg, qat=False)
+    length = batch.get("length")
+    if length is None:
+        new_cache["pos"] = jnp.full((B,), T, jnp.int32)
+        logits = _logits(params, x[:, -1:], cfg, qat=False)
+    else:
+        length = jnp.asarray(length, jnp.int32).reshape(B)
+        new_cache["pos"] = length
+        new_cache = _rewind_lengths(new_cache, jnp.max(length))
+        idx = jnp.broadcast_to((length - 1)[:, None, None],
+                               (B, 1, x.shape[-1]))
+        logits = _logits(params, jnp.take_along_axis(x, idx, axis=1),
+                         cfg, qat=False)
     return logits, new_cache
+
+
+def _rewind_lengths(cache, length):
+    """Clamp every attention-cache ``length`` counter (a batch-shared
+    scalar, see attention cache specs) to the true prompt length: a
+    bucketed prefill writes pad-token KV at positions >= length, and
+    decode masks keys by ``pos < length``, so the clamp makes the pad
+    rows unreachable (the next decode step overwrites the first one).
+    Exact for uniform-length batches — the engine's B=1 prefill."""
+    def fix(path, v):
+        if getattr(path[-1], "key", None) == "length":
+            return jnp.minimum(v, length)
+        return v
+    return jax.tree_util.tree_map_with_path(fix, cache)
 
 
 def forward_decode(params, batch, cfg: ArchConfig, cache):

@@ -11,12 +11,16 @@ Two forward paths (DESIGN.md §4):
 * **dense** (training / pre-refactor baseline): im2col patches through
   ``apply_linear`` with separate XLA Collector ops — kept verbatim as the
   reference the compiled path is validated against.
-* **compiled**: weights are constant int8 codes carrying their (k, stride,
-  c_in) geometry; each conv is ONE fused implicit-GEMM launch
+* **compiled**: weights are constant int8 codes stored in the kernels'
+  spatial-major tap layout and carrying their (k, stride, c_in) geometry;
+  each conv is ONE fused row-strip-tiled implicit-GEMM launch
   (``compiled_linear.apply_conv``) with the whole Collector in the
-  epilogue, and residual blocks run a quantization-domain pass — one
-  ``act_quant`` at block entry, then activations stay int8 between the
-  a/b/c convs instead of per-conv f32 requant round-trips.  In
+  epilogue — the strip planner (kernels/tiling.py) bounds per-cell VMEM
+  so the path scales past ResNet50 geometry (the 224x224 stem tiles;
+  7x7 conv5_x maps stay a single strip) — and residual blocks run a
+  quantization-domain pass: one ``act_quant`` at block entry, then
+  activations stay int8 between the a/b/c convs instead of per-conv f32
+  requant round-trips.  In
   ``sparse_cfmm`` mode the weight leaves are bitmap-packed and the same
   seam dispatches to the bitmap-native sparse conv kernel
   (``kernels/conv_sparse.py``) — this file needs no sparse-specific code;

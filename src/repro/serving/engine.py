@@ -12,7 +12,7 @@ recompilation ever happens at serve time.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,23 @@ class Request:
     done: bool = False
 
 
+def _bucket_len(L: int, max_seq: int) -> int:
+    """Prompt-length bucket: the next power of two (>= 8), capped at the
+    engine's max_seq.  One compiled prefill program serves a whole bucket
+    — end-padding is exact under causal attention (lm.forward_prefill)."""
+    b = 8
+    while b < L:
+        b <<= 1
+    return min(b, max_seq)
+
+
 class ServingEngine:
+    # jitted prefill programs kept per LENGTH BUCKET, LRU-bounded: the old
+    # per-exact-length cache compiled one program per distinct prompt
+    # length, unbounded.  Power-of-two bucketing alone bounds the count to
+    # ~log2(max_seq); the LRU cap is a hard backstop.
+    PREFILL_CACHE_MAX = 8
+
     def __init__(self, cfg: ArchConfig, params, *, mode: str = "int8",
                  sparsity: float = 0.8, batch_slots: int = 4,
                  max_seq: int = 256):
@@ -50,27 +66,49 @@ class ServingEngine:
         self.active: list[Request | None] = [None] * batch_slots
         self._decode = jax.jit(
             lambda p, c, b: lm.forward_decode(p, b, cfg, c))
-        self._prefill_cache = {}
+        self._prefill_cache: OrderedDict = OrderedDict()
+        # bucketed (end-padded) prefill is exact only when every mixer is
+        # causal attention: pad tokens advance mamba/rwkv recurrent scan
+        # states, which no length rewind can undo.  Recurrent stacks keep
+        # exact-length programs (the LRU bound below still applies).
+        self._bucket_prefill = (not cfg.encoder_decoder and
+                                all(sig["kind"] == "attn"
+                                    for sig in cfg.layer_sigs()))
 
     # -- request management --------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _prefill_fn(self, bucket: int):
+        """The compiled prefill program for a length bucket (LRU)."""
+        if bucket in self._prefill_cache:
+            self._prefill_cache.move_to_end(bucket)
+        else:
+            while len(self._prefill_cache) >= self.PREFILL_CACHE_MAX:
+                self._prefill_cache.popitem(last=False)
+            self._prefill_cache[bucket] = jax.jit(
+                lambda p, c, b: lm.forward_prefill(p, b, self.cfg, c))
+        return self._prefill_cache[bucket]
 
     def _prefill_one(self, slot: int, req: Request):
         """Prefill a single request into batch slot ``slot``.
 
         Single-slot prefill uses a batch-1 cache then copies it into the
         shared decode cache at the slot index (the production engine
-        would prefill on a separate prefill mesh; same dataflow)."""
+        would prefill on a separate prefill mesh; same dataflow).  For
+        attention-only stacks the prompt is end-padded to its power-of-
+        two bucket and the true length rides the batch — exact, see
+        lm.forward_prefill; recurrent stacks prefill at exact length."""
         L = len(req.prompt)
-        key = L
-        if key not in self._prefill_cache:
-            self._prefill_cache[key] = jax.jit(
-                lambda p, c, b: lm.forward_prefill(p, b, self.cfg, c))
+        bucket = _bucket_len(L, self.max_seq) if self._bucket_prefill else L
+        fn = self._prefill_fn(bucket)
         cache1 = nn.unbox(lm.cache_init(self.cfg, 1, self.max_seq))
-        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
-        logits, cache1 = self._prefill_cache[key](self.params, cache1,
-                                                  {"tokens": toks})
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        batch = {"tokens": jnp.asarray(toks)}
+        if bucket != L:
+            batch["length"] = jnp.asarray([L], jnp.int32)
+        logits, cache1 = fn(self.params, cache1, batch)
         nxt = int(jnp.argmax(logits[0, -1]))
         req.tokens_out.append(nxt)
         self.cache = _merge_slot_cache(self.cache, cache1, slot)

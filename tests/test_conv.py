@@ -128,6 +128,62 @@ def test_interpret_and_jnp_lowering_agree(monkeypatch):
                                float(outs["interpret"][1]), rtol=1e-6)
 
 
+def test_dense_conv_serving_zero_layout_shuffles(monkeypatch):
+    """Acceptance: compile_params stores dense conv leaves spatial-major,
+    so ops.conv2d performs ZERO weight-layout shuffles at call time —
+    mirroring the sparse zero-unpack spy.  The one permute
+    (ref.to_spatial_major) runs at compile time only."""
+    leaves = {}
+    for mode in ("int8", "cfmm", "bitserial"):
+        p = {"w": nn.conv_param(jax.random.PRNGKey(1), 8, 16, 3, 1,
+                                ("conv_in", "conv_out"))}
+        leaves[mode] = nn.unbox(cl.compile_params(p, mode=mode))["w"]
+    calls = {"n": 0}
+    real_to, real_from = ref.to_spatial_major, ref.from_spatial_major
+
+    def spy_to(*a, **kw):
+        calls["n"] += 1
+        return real_to(*a, **kw)
+
+    def spy_from(*a, **kw):
+        calls["n"] += 1
+        return real_from(*a, **kw)
+
+    monkeypatch.setattr(ref, "to_spatial_major", spy_to)
+    monkeypatch.setattr(ref, "from_spatial_major", spy_from)
+    x = jax.random.randint(jax.random.PRNGKey(2), (1, 8, 8, 8), -127, 128,
+                           jnp.int8)
+    for mode, w in leaves.items():
+        for lowering in ("jnp", "interpret"):
+            monkeypatch.setenv("REPRO_PALLAS", lowering)
+            y_q, s_y = cl.apply_conv(w, x, 0.02, quant_out=True)
+            assert y_q.dtype == jnp.int8
+    assert calls["n"] == 0
+    # raw (pre-compile) channel-major codes still pay exactly one permute
+    qt = quantize_int7(
+        jax.random.normal(jax.random.PRNGKey(3), (8 * 9, 16)) * 0.1)
+    ops.conv2d(x, qt.values, 3, 1, x_scale=0.02,
+               w_scale=qt.scale.reshape(-1), relu=False)
+    assert calls["n"] == 1
+
+
+def test_spatial_major_roundtrip():
+    """to_spatial_major / from_spatial_major invert each other and agree
+    with the tap-slab semantics the kernels assume (row = tap*c_in + c)."""
+    k, C, n = 3, 5, 4
+    codes = jnp.arange(k * k * C * n, dtype=jnp.int32).reshape(k * k * C, n)
+    sp = ref.to_spatial_major(codes, k, C)
+    np.testing.assert_array_equal(
+        np.asarray(ref.from_spatial_major(sp, k, C)), np.asarray(codes))
+    # tap slab (dy, dx) in spatial-major == channel-major rows c*k*k + tap
+    for dy in range(k):
+        for dx in range(k):
+            tap = dy * k + dx
+            np.testing.assert_array_equal(
+                np.asarray(sp[tap * C:(tap + 1) * C]),
+                np.asarray(codes[jnp.arange(C) * k * k + tap]))
+
+
 def test_compiled_conv_carries_geometry():
     """compile_params attaches a static (k, stride, c_in) geom that
     survives nn.unbox and jax.tree operations."""

@@ -21,6 +21,67 @@ def test_cfmm_matmul_kernel_exact(M, K, N):
                                   np.asarray(ref.int8_matmul_ref(x, qt.values)))
 
 
+def test_tile_pad_prime_dims_not_degenerate():
+    """Regression for the _largest_tile pathology: a prime axis above the
+    tile cap used to degrade to tile size 1 (one grid cell per column);
+    _tile_pad pads to the next cap multiple instead."""
+    from repro.kernels.ops import _tile_pad
+    assert _tile_pad(131, 128) == (128, 256)           # prime N
+    assert _tile_pad(1031, 512) == (512, 1536)         # prime K
+    assert _tile_pad(134, 128) == (128, 256)           # 2*67: tile 67 is
+    assert _tile_pad(128, 128) == (128, 128)           # no sublane multiple
+    assert _tile_pad(96, 128) == (96, 96)              # fits: single tile
+    assert _tile_pad(256, 128) == (128, 256)
+    assert _tile_pad(192, 128) == (96, 192)            # clean divisor kept
+    # 8*prime: the largest divisor is a sliver tile of 8 — pad instead
+    assert _tile_pad(8 * 131, 128) == (128, 1152)
+    assert _tile_pad(8 * 521, 512) == (512, 4608)
+
+
+def test_cfmm_matmul_prime_dims_exact():
+    """Prime K and N run the padded-tile path and stay exact (the zero
+    pad rows/cols vanish under int8 matmul)."""
+    key = jax.random.PRNGKey(4)
+    M, K, N = 4, 1031, 131
+    x = jax.random.randint(key, (M, K), -127, 128, jnp.int8)
+    qt = quantize_int7(jax.random.normal(key, (K, N)))
+    y = ops.cfmm_matmul(x, qt.values)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(ref.int8_matmul_ref(x, qt.values)))
+    ys = ops.cfmm_matmul(x, qt.values, qt.scale.reshape(1, N))
+    np.testing.assert_allclose(
+        np.asarray(ys),
+        np.asarray(ref.int8_matmul_ref(x, qt.values), np.float32)
+        * np.asarray(qt.scale.reshape(1, N)), rtol=1e-6)
+
+
+def test_sparse_matvec_prime_n_exact():
+    """Prime N through the bitmap kernel: padded zero bitmap columns
+    expand to zero codes, sliced off after the launch."""
+    key = jax.random.PRNGKey(6)
+    K, N, keep = 512, 131, 104
+    qt = cl.balanced_prune_codes(jax.random.normal(key, (K, N)), keep)
+    bitmap, values = cl.bitmap_pack(qt.values, keep)
+    x = jax.random.randint(key, (4, K), -127, 128, jnp.int8)
+    y = ops.sparse_cfmm_matmul(x, bitmap, values)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.sparse_matvec_ref(x, bitmap, values)))
+
+
+def test_conv_prime_n_out_exact():
+    """Prime c_out > 128 through the conv kernel pads channels to the
+    lane tile and slices back — bit-identical to the jnp oracle."""
+    k, C, n_out = 3, 8, 131
+    key = jax.random.PRNGKey(8)
+    x = jax.random.randint(key, (1, 8, 8, C), -127, 128, jnp.int8)
+    qt = quantize_int7(jax.random.normal(key, (C * k * k, n_out)) * 0.1)
+    y = ops.conv2d(x, qt.values, k, 1, x_scale=1.0,
+                   w_scale=jnp.ones((n_out,)), relu=False)
+    acc = ref.conv2d_int8_ref(x, qt.values, k, 1)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(acc).astype(np.float32))
+
+
 @pytest.mark.parametrize("M,K,N", [(8, 512, 128), (4, 1024, 256)])
 def test_cfmm_matmul_fused_scale(M, K, N):
     key = jax.random.PRNGKey(0)

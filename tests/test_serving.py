@@ -43,6 +43,89 @@ def test_engine_continuous_batching_refills_slots():
     assert all(len(r.tokens_out) == 4 for r in reqs)
 
 
+def test_prefill_cache_bucketed_and_bounded():
+    """The engine compiles one prefill program per power-of-two length
+    bucket (not per distinct prompt length) and LRU-bounds the cache —
+    many distinct lengths share a handful of programs, and the bucketed
+    (end-padded) prefill still reproduces the exact unpadded decode."""
+    cfg = build_cfg("smollm_360m", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                           max_seq=64)
+    rng = np.random.RandomState(2)
+    lengths = list(range(3, 19))                  # 16 distinct lengths
+    reqs = [Request(rid=i, prompt=list(rng.randint(1, cfg.vocab, L)),
+                    max_new_tokens=3) for i, L in enumerate(lengths)]
+    engine.run(reqs)
+    assert all(r.done for r in reqs)
+    # buckets {8, 16, 32} only — 3 programs for 16 lengths
+    assert set(engine._prefill_cache) <= {8, 16, 32}
+    assert len(engine._prefill_cache) <= 3
+
+    # exactness: bucketed (end-padded) prefill == manual unpadded
+    # reference, on a fresh engine per prompt (the shared decode cache's
+    # scalar length counter max-merges across sequential requests — a
+    # pre-existing engine property independent of bucketing)
+    pv = nn.unbox(params)
+    for r in (reqs[0], reqs[-1]):
+        fresh = ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                              max_seq=64)
+        rf = Request(rid=0, prompt=list(r.prompt), max_new_tokens=3)
+        fresh.run([rf])
+        cache = nn.unbox(lm.cache_init(cfg, 1, 64))
+        toks = jnp.asarray(np.asarray(r.prompt)[None], jnp.int32)
+        logits, cache = lm.forward_prefill(pv, {"tokens": toks}, cfg, cache)
+        out = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(2):
+            logits, cache = lm.forward_decode(
+                pv, {"token": jnp.asarray([[out[-1]]], jnp.int32)}, cfg,
+                cache)
+            out.append(int(jnp.argmax(logits[0, -1])))
+        assert rf.tokens_out == out
+
+
+def test_recurrent_arch_prefills_exact_length():
+    """Bucketing is gated on attention-only stacks: pad tokens advance
+    mamba/rwkv recurrent scan states that no length rewind can undo, so
+    a recurrent engine prefills at exact prompt length (still LRU-
+    bounded) and keeps matching the manual unpadded reference."""
+    cfg = build_cfg("rwkv6_7b", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                           max_seq=32)
+    assert not engine._bucket_prefill
+    prompt = list(np.random.RandomState(4).randint(1, cfg.vocab, 5))
+    req = Request(rid=0, prompt=prompt, max_new_tokens=3)
+    engine.run([req])
+    assert 5 in engine._prefill_cache        # exact length, not bucket 8
+
+    pv = nn.unbox(params)
+    cache = nn.unbox(lm.cache_init(cfg, 1, 32))
+    toks = jnp.asarray(np.asarray(prompt)[None], jnp.int32)
+    logits, cache = lm.forward_prefill(pv, {"tokens": toks}, cfg, cache)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(2):
+        logits, cache = lm.forward_decode(
+            pv, {"token": jnp.asarray([[out[-1]]], jnp.int32)}, cfg, cache)
+        out.append(int(jnp.argmax(logits[0, -1])))
+    assert req.tokens_out == out
+
+
+def test_prefill_cache_lru_eviction():
+    """The LRU backstop evicts the oldest bucket once PREFILL_CACHE_MAX
+    distinct buckets have been compiled."""
+    cfg = build_cfg("smollm_360m", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                           max_seq=256)
+    engine.PREFILL_CACHE_MAX = 2
+    rng = np.random.RandomState(3)
+    for L in (5, 12, 30):                         # buckets 8, 16, 32
+        engine.run([Request(rid=L, prompt=list(rng.randint(1, cfg.vocab, L)),
+                            max_new_tokens=1)])
+    assert list(engine._prefill_cache) == [16, 32]   # 8 evicted, LRU order
+
+
 def test_compiled_modes_storage_shrinks():
     cfg = build_cfg("smollm_360m", "tiny")
     params = lm.init(jax.random.PRNGKey(0), cfg)
