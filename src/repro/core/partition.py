@@ -23,6 +23,14 @@ from repro.core import fpga_model
 from repro.core.fpga_model import FPGASpec, GX280, GX550, ConvLayerSpec
 
 
+class PartitionError(ValueError):
+    """A layer/block cannot be placed within the chip's usable fabric.
+
+    Raised instead of silently emitting chips above ``util_target`` (the
+    old packer gave every oversized kernel instance its own >100%-utilized
+    chip and reported success)."""
+
+
 @dataclasses.dataclass
 class Chip:
     index: int
@@ -66,6 +74,10 @@ class PartitionResult:
                               for c in self.chips],
         )
 
+    def stage_plans(self, blocks: list, n_stages: int | None = None) -> list:
+        """Executable ``StagePlan``s for this partition (see stage_plans)."""
+        return stage_plans(self, blocks, n_stages)
+
 
 def partition(blocks: list[list[ConvLayerSpec]], target_im_s: float,
               spec: FPGASpec = GX280, util_target: float = 0.76,
@@ -98,6 +110,15 @@ def partition(blocks: list[list[ConvLayerSpec]], target_im_s: float,
         else:                # oversized block: layer/instance-granular split
             for p, l in zip(plans, blk):
                 per_inst = p["alms"] / max(p["instances"], 1)
+                if per_inst > cap:
+                    # even one kernel instance (at the cost model's maximum
+                    # useful fold) overflows the usable fabric: error out
+                    # rather than emitting a >util_target chip
+                    raise PartitionError(
+                        f"layer {l.name}: one instance needs "
+                        f"{per_inst / 1e3:.0f}k ALMs at fold {p['fold']} "
+                        f"but only {cap / 1e3:.0f}k are usable on "
+                        f"{spec.name} at util_target={util_target}")
                 for _ in range(max(p["instances"], 1)):
                     if (chips[-1].alms_used + per_inst > cap
                             and chips[-1].layers):
@@ -158,6 +179,136 @@ def fig7_projection(spec: FPGASpec = GX280) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Executable stage plans (the Fig 7 partition as a runnable pipeline)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One pipeline stage of the *executable* multi-device serving path.
+
+    ``block_ids`` index the network's block list (``resnet.conv_blocks_for``
+    order: 0 = the stem, 1.. = residual blocks); the serving engine maps
+    them 1:1 onto its pipeline units, with the classifier head riding the
+    last stage.  ``link_bytes`` is the analytic int8 activation payload
+    this stage sends downstream per image — the paper's 8-bit inter-chip
+    link, cross-checked against the bytes the executed pipeline actually
+    moves (tests/test_pipeline.py).
+    """
+
+    index: int
+    block_ids: tuple
+    layer_names: tuple
+    link_bytes: int            # int8 bytes/image on the outgoing edge (0: last)
+    macs: int = 0
+    alms: float = 0.0
+
+    def link_gbps(self, im_s: float) -> float:
+        return self.link_bytes * 8 * im_s / 1e9
+
+
+def edge_bytes_after_block(blocks: list, j: int) -> int:
+    """int8 activation bytes per image leaving block ``j``.
+
+    The analytic specs record each conv's *own* output map; the executable
+    stem unit additionally max-pools 2x2 before handing off (ResNet's
+    stride-2 pool), so the stem edge carries a quarter of conv1's map.
+    """
+    spec = blocks[j][-1]
+    if j == 0:
+        hw = -(-spec.hw // 2)          # SAME stride-2 maxpool
+        return hw * hw * spec.c_out
+    return spec.out_bytes
+
+
+def split_stages(costs: list, n_stages: int) -> list:
+    """Balanced contiguous split of ``costs`` into ``n_stages`` non-empty
+    groups (greedy threshold; never emits fewer groups than asked while
+    items remain)."""
+    n_stages = max(1, min(n_stages, len(costs)))
+    total = float(sum(costs))
+    target = total / n_stages
+    groups, cur, acc = [], [], 0.0
+    for i, c in enumerate(costs):
+        # adding item i to cur must leave enough items for the remaining
+        # groups; close cur first when it would not
+        if cur and len(costs) - i < n_stages - len(groups):
+            groups.append(tuple(cur))
+            cur, acc = [], 0.0
+        cur.append(i)
+        acc += float(c)
+        if acc >= target and len(groups) < n_stages - 1:
+            groups.append(tuple(cur))
+            cur, acc = [], 0.0
+    if cur:
+        groups.append(tuple(cur))
+    return groups
+
+
+def _plans_from_groups(blocks: list, groups: list,
+                       alms_per_block: list | None = None) -> list:
+    plans = []
+    for s, ids in enumerate(groups):
+        names = tuple(l.name for j in ids for l in blocks[j])
+        link = 0 if s == len(groups) - 1 else \
+            edge_bytes_after_block(blocks, ids[-1])
+        macs = int(sum(l.macs for j in ids for l in blocks[j]))
+        alms = (sum(alms_per_block[j] for j in ids)
+                if alms_per_block is not None else 0.0)
+        plans.append(StagePlan(s, tuple(ids), names, link, macs, alms))
+    return plans
+
+
+def plan_stages(blocks: list, n_stages: int) -> list:
+    """MAC-balanced contiguous ``StagePlan``s along block boundaries —
+    the explicit-stage-map path (no FPGA cost model involved)."""
+    groups = split_stages([sum(l.macs for l in blk) for blk in blocks],
+                          n_stages)
+    return _plans_from_groups(blocks, groups)
+
+
+def explicit_stage_plans(blocks: list, groups: list) -> list:
+    """``StagePlan``s from an explicit stage map (tuple of block-id tuples
+    — must be a contiguous in-order partition of the block list)."""
+    flat = [j for g in groups for j in g]
+    assert flat == list(range(len(blocks))), (
+        "stage map must cover blocks 0..%d contiguously" % (len(blocks) - 1),
+        groups)
+    return _plans_from_groups(blocks, [tuple(g) for g in groups])
+
+
+def stage_plans(result: PartitionResult, blocks: list,
+                n_stages: int | None = None) -> list:
+    """Executable stages from a Fig 7 chip packing.
+
+    Chip boundaries are re-aligned to block boundaries (a block whose
+    layers were instance-split across chips folds into the stage owning
+    its first layer — the executable granularity is the residual block,
+    which keeps every shortcut on-stage).  With ``n_stages`` the chip
+    grouping is re-balanced by per-block ALMs into that many contiguous
+    stages (serving fewer devices than Fig 7 chips).
+    """
+    chip_of_layer = {}
+    for chip in result.chips:
+        for p in chip.layers:
+            chip_of_layer.setdefault(p["layer"], chip.index)
+    block_chip = [chip_of_layer[blk[0].name] for blk in blocks]
+    alms_per_block = [sum(p["alms"] for c in result.chips for p in c.layers
+                          if p["layer"] in {l.name for l in blk})
+                      for blk in blocks]
+    if n_stages is not None:
+        groups = split_stages(alms_per_block, n_stages)
+    else:
+        groups, cur = [], [0]
+        for j in range(1, len(blocks)):
+            if block_chip[j] != block_chip[j - 1]:
+                groups.append(tuple(cur))
+                cur = []
+            cur.append(j)
+        groups.append(tuple(cur))
+    return _plans_from_groups(blocks, groups, alms_per_block)
+
+
+# ---------------------------------------------------------------------------
 # LM pipeline partitioning (the paper's multi-chip pipeline, for the zoo)
 # ---------------------------------------------------------------------------
 
@@ -205,17 +356,7 @@ def partition_lm(cfg, n_stages: int, batch: int = 1, seq: int = 1,
         return f
 
     flops = [layer_flops(s) for s in sigs]
-    total = sum(flops)
-    target = total / n_stages
-    stages, cur, acc = [], [], 0.0
-    for i, f in enumerate(flops):
-        cur.append(i)
-        acc += f
-        if acc >= target and len(stages) < n_stages - 1:
-            stages.append(cur)
-            cur, acc = [], 0.0
-    if cur:
-        stages.append(cur)
+    stages = split_stages(flops, n_stages)
     bpp = BYTES_PER_PARAM.get(serve_mode, 2.0)
     stage_flops = [sum(flops[i] for i in st) for st in stages]
     # per-stage resident weight bytes (flops/token = 2*params for linears)

@@ -1,0 +1,148 @@
+"""Multi-device pipeline-parallel conv execution — the executable Fig 7.
+
+The paper's multi-chip deployment is a *layer pipeline*: each chip holds
+one contiguous slice of the network as constant parameters (persistent
+weights), 8-bit feature maps cross the chip boundaries, and every chip
+processes a different image at once (HPIPE's layer-pipelined discipline).
+This module is the TPU/CPU-device analogue:
+
+* each ``PipelineStage`` owns a *device-resident, disjoint* subtree of the
+  compiled parameters (only its own units' constant weights — the
+  "persistent" property, spy-tested in tests/test_pipeline.py) and one
+  jitted stage program;
+* edges carry the quantization-domain pair ``(int8 activations, f32
+  scale)`` — the 8-bit inter-chip link.  Per-edge payload bytes are
+  *measured* from the arrays actually transferred and cross-checked
+  against ``partition.StagePlan.link_bytes``;
+* microbatches rotate through the stages on a GPipe-style fill/steady/
+  drain schedule (``tick``): at every tick each stage that holds an input
+  launches its program and hands the output to its successor's inlet
+  buffer.  Stages are visited in reverse order, so stage ``s``'s launch
+  for microbatch ``m`` and the transfer of microbatch ``m+1`` into its
+  inlet are both in flight in the same tick — the double-buffered stage
+  boundary of paper SS II-D.1.  JAX's async dispatch overlaps the
+  per-device launches; nothing here blocks until the caller consumes an
+  output.
+
+Why not a ``shard_map``/``ppermute`` collective: ResNet stages have
+*heterogeneous* edge shapes (56x56x256 -> 7x7x2048), and a rotating
+collective needs one uniform carrier buffer padded to the largest edge —
+8-bit links exist precisely to keep boundary traffic small, so we keep
+the native shapes and explicit per-edge transfers (DESIGN.md §7).
+
+Bubble accounting: a schedule of M microbatches over S stages runs
+``M + S - 1`` ticks -> bubble fraction ``(S-1)/(M+S-1)`` of stage-ticks
+idle, measured and reported alongside the analytic value.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineStage:
+    """One device's slice of the network: jitted program + resident params."""
+
+    index: int
+    device: object
+    fn: object                 # jitted (stage_params, carry) -> carry
+    params: object             # device-resident param subtree (disjoint)
+    unit_names: tuple
+
+    def weight_bytes(self) -> int:
+        return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                       for l in jax.tree.leaves(self.params)))
+
+
+def carry_bytes(carry) -> dict:
+    """Measured payload of one edge transfer: int8 feature-map bytes vs
+    everything else (the f32 scale scalar)."""
+    int8_b = meta_b = 0
+    for leaf in jax.tree.leaves(carry):
+        if leaf.dtype == jnp.int8:
+            int8_b += leaf.nbytes
+        else:
+            meta_b += leaf.nbytes
+    return {"int8_bytes": int(int8_b), "meta_bytes": int(meta_b)}
+
+
+class ConvPipeline:
+    """Rotating-microbatch schedule over per-device pipeline stages.
+
+    ``tick(inject=None, tag=None)`` advances every stage by one
+    microbatch slot and returns the ``(tag, output)`` pairs that left the
+    last stage this tick; ``serving.pipeline.PipelineEngine`` drives the
+    fill/steady/drain loop and consumes ``stats()``.
+    """
+
+    def __init__(self, stages: list):
+        self.stages = stages
+        self.n_stages = len(stages)
+        self._inlet = [None] * self.n_stages    # per-stage input buffer
+        self._tags = [None] * self.n_stages
+        self.ticks = 0
+        self.microbatches_done = 0
+        self.edge_bytes: list = [None] * max(self.n_stages - 1, 0)
+        self.sample_inputs: list = [None] * self.n_stages
+
+    @property
+    def busy(self) -> bool:
+        return any(b is not None for b in self._inlet)
+
+    def tick(self, inject=None, tag=None) -> list:
+        """One schedule step.  ``inject`` (optional) enters stage 0's
+        inlet and is computed this tick; returns completed ``(tag, out)``
+        pairs (possibly empty during fill).  Raises if stage 0 is still
+        busy — callers gate injection on ``inlet_free``.  M microbatches
+        over S stages complete in exactly M + S - 1 ticks."""
+        done = []
+        self.ticks += 1
+        if inject is not None:
+            assert self._inlet[0] is None, "stage 0 inlet busy"
+            self._inlet[0] = jax.device_put(inject, self.stages[0].device)
+            self._tags[0] = tag
+        # reverse stage order: stage s launches on the microbatch its
+        # inlet buffered, then frees the inlet for the predecessor's
+        # output issued later in this same tick — stage s's compute and
+        # the transfer into its inlet are concurrently in flight (the
+        # double-buffered boundary; JAX dispatch is async)
+        for s in reversed(range(self.n_stages)):
+            if self._inlet[s] is None:
+                continue
+            stage = self.stages[s]
+            carry, t = self._inlet[s], self._tags[s]
+            if self.sample_inputs[s] is None:
+                self.sample_inputs[s] = carry
+            self._inlet[s] = None
+            out = stage.fn(stage.params, carry)
+            if s + 1 < self.n_stages:
+                if self.edge_bytes[s] is None:
+                    self.edge_bytes[s] = carry_bytes(out)
+                out = jax.device_put(out, self.stages[s + 1].device)
+                self._inlet[s + 1], self._tags[s + 1] = out, t
+            else:
+                self.microbatches_done += 1
+                done.append((t, out))
+        return done
+
+    @property
+    def inlet_free(self) -> bool:
+        return self._inlet[0] is None
+
+    def stats(self) -> dict:
+        s, m = self.n_stages, self.microbatches_done
+        total = s * self.ticks
+        return {
+            "n_stages": s,
+            "microbatches": m,
+            "ticks": self.ticks,
+            "bubble_fraction": 1.0 - (s * m) / total if total else 0.0,
+            "bubble_fraction_analytic": (s - 1) / (m + s - 1) if m else 0.0,
+            "edge_bytes": list(self.edge_bytes),
+            "stage_weight_bytes": [st.weight_bytes() for st in self.stages],
+            "stage_devices": [str(st.device) for st in self.stages],
+        }

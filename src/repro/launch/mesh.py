@@ -33,3 +33,16 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     n = int(np.prod(shape))
     dev = np.asarray(jax.devices()[:n]).reshape(shape)
     return jax.sharding.Mesh(dev, axes)
+
+
+def pipeline_stage_devices(n_stages: int, devices=None) -> list:
+    """Device list for the pipeline-parallel CNN serving path: one device
+    per stage, in a 1-D 'stage' chain (the Fig 7 chip line re-expressed
+    over local accelerators).  With fewer physical devices than stages,
+    stages wrap round-robin — correctness is placement-independent (only
+    throughput changes), which is what lets the whole pipeline degenerate
+    to one CPU device in tests.  Fan a CPU host out to N devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    return [devices[s % len(devices)] for s in range(n_stages)]

@@ -18,9 +18,14 @@ Two forward paths (DESIGN.md §4):
   epilogue — the strip planner (kernels/tiling.py) bounds per-cell VMEM
   so the path scales past ResNet50 geometry (the 224x224 stem tiles;
   7x7 conv5_x maps stay a single strip) — and residual blocks run a
-  quantization-domain pass: one ``act_quant`` at block entry, then
+  quantization-domain pass: one ``act_quant`` per block, then
   activations stay int8 between the a/b/c convs instead of per-conv f32
-  requant round-trips.  In
+  requant round-trips.  The compiled forward is factored into
+  ``compiled_units`` — stem / residual blocks / head, each a pure
+  function of its own param subtree with producer-side quantization, so
+  every unit edge is an ``(int8, scale)`` pair and the pipeline-parallel
+  engine (serving/pipeline.py) slices the unit list into per-device
+  stages bit-identically (DESIGN.md §7).  In
   ``sparse_cfmm`` mode the weight leaves are bitmap-packed and the same
   seam dispatches to the bitmap-native sparse conv kernel
   (``kernels/conv_sparse.py``) — this file needs no sparse-specific code;
@@ -78,22 +83,37 @@ def table1() -> dict:
     return rows
 
 
-def resnet50_conv_blocks() -> list[list[ConvLayerSpec]]:
-    """All conv layers grouped by residual block (for the Fig 7 planner)."""
-    blocks = [[ConvLayerSpec("conv1", 3, 64, 7, 112, stride=2)]]
-    in_ch = 64
-    for name, n_blocks, mid, out, hw in RESNET50_STAGES:
+def conv_blocks_for(cfg: ResNetConfig) -> list[list[ConvLayerSpec]]:
+    """All conv layers grouped by block for an arbitrary config — block 0
+    is the stem, then residual blocks in dataflow order.  Feature sizes
+    follow the model's SAME/stride chain from ``cfg.in_hw``, so the
+    analytic specs (and their ``out_bytes`` link counts) describe exactly
+    the network the serving pipeline executes."""
+    w0 = max(8, int(64 * cfg.width_mult))
+    h = -(-cfg.in_hw // 2)                       # stride-2 stem conv
+    blocks = [[ConvLayerSpec("conv1", 3, w0, 7, h, stride=2)]]
+    h = -(-h // 2)                               # stride-2 maxpool
+    in_ch = w0
+    for i in range(4):
+        name, n_blocks, mid, out, _ = cfg.stage(i)
+        if name != "conv2_x":
+            h = -(-h // 2)                       # stage-entry stride
         for b in range(n_blocks):
             layers = [
-                ConvLayerSpec(f"{name}_{b+1}_a", in_ch, mid, 1, hw),
-                ConvLayerSpec(f"{name}_{b+1}_b", mid, mid, 3, hw),
-                ConvLayerSpec(f"{name}_{b+1}_c", mid, out, 1, hw),
+                ConvLayerSpec(f"{name}_{b+1}_a", in_ch, mid, 1, h),
+                ConvLayerSpec(f"{name}_{b+1}_b", mid, mid, 3, h),
+                ConvLayerSpec(f"{name}_{b+1}_c", mid, out, 1, h),
             ]
             if b == 0:  # projection shortcut
-                layers.append(ConvLayerSpec(f"{name}_{b+1}_sc", in_ch, out, 1, hw))
+                layers.append(ConvLayerSpec(f"{name}_{b+1}_sc", in_ch, out, 1, h))
             blocks.append(layers)
             in_ch = out
     return blocks
+
+
+def resnet50_conv_blocks() -> list[list[ConvLayerSpec]]:
+    """All conv layers grouped by residual block (for the Fig 7 planner)."""
+    return conv_blocks_for(ResNetConfig())
 
 
 # ---------------------------------------------------------------------------
@@ -164,27 +184,79 @@ def init(key, cfg: ResNetConfig):
     return params
 
 
-def _apply_compiled(params, x, cfg: ResNetConfig):
-    """Compiled serving path: fused implicit-GEMM convs + the quantization-
-    domain pass — activations are quantized once per residual block and
-    stay int8 between the a/b/c convs (conv a and b requantize in their
-    epilogue; conv c returns f32 for the shortcut Collector and pooling).
+@dataclasses.dataclass(frozen=True)
+class PipelineUnit:
+    """One schedulable unit of the compiled forward.
+
+    ``fn(params, carry) -> carry`` is a pure function of the unit's OWN
+    param subtree (``params`` here), so a pipeline stage holds exactly its
+    units' constant weights and nothing else — the paper's persistent
+    per-chip network.  Every edge between units is the quantization-domain
+    pair ``(int8 activations, f32 scale)`` — the 8-bit inter-chip link —
+    except the f32 image into the stem and the f32 logits out of the head.
+    ``block_id`` indexes ``conv_blocks_for``'s block list (stem = 0) so
+    ``partition.StagePlan``s map 1:1 onto units; the head rides the last
+    stage (``block_id`` -1).
     """
+
+    name: str
+    block_id: int
+    params: dict
+    fn: object
+
+
+def _stem_unit(p, x):
     x_q, s = act_quant(x)
-    h = _conv_q(params["stem"], x_q, s, relu=True)
+    h = _conv_q(p, x_q, s, relu=True)
     h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
+    return act_quant(h)
+
+
+def _block_unit(p, carry):
+    h_q, s_h = carry
+    sc = (_conv_q(p["sc"], h_q, s_h, relu=False) if "sc" in p
+          else h_q.astype(jnp.float32) * s_h)
+    a_q, s_a = _conv_q(p["a"], h_q, s_h, quant_out=True)
+    b_q, s_b = _conv_q(p["b"], a_q, s_a, quant_out=True)
+    h = _conv_q(p["c"], b_q, s_b, shortcut=sc, relu=True)
+    return act_quant(h)
+
+
+def _head_unit(p, carry):
+    h_q, s_h = carry
+    pooled = jnp.mean(h_q.astype(jnp.float32) * s_h, axis=(1, 2))
+    return apply_linear(p["w"], pooled)
+
+
+def compiled_units(params, cfg: ResNetConfig) -> list:
+    """The compiled forward as an ordered list of pipeline units: the stem
+    (conv + maxpool), each residual block, and the classifier head."""
+    units = [PipelineUnit("stem", 0, params["stem"], _stem_unit)]
+    bid = 1
     for i in range(4):
-        name, _, _, _, _ = cfg.stage(i)
-        for blk in params[name]:
-            h_q, s_h = act_quant(h)                # one quant per block
-            sc = (_conv_q(blk["sc"], h_q, s_h, relu=False)
-                  if "sc" in blk else h)
-            a_q, s_a = _conv_q(blk["a"], h_q, s_h, quant_out=True)
-            b_q, s_b = _conv_q(blk["b"], a_q, s_a, quant_out=True)
-            h = _conv_q(blk["c"], b_q, s_b, shortcut=sc, relu=True)
-    pooled = jnp.mean(h, axis=(1, 2))
-    return apply_linear(params["head"]["w"], pooled)
+        name = cfg.stage(i)[0]
+        for b, blk in enumerate(params[name]):
+            units.append(PipelineUnit(f"{name}_{b+1}", bid, blk,
+                                      _block_unit))
+            bid += 1
+    units.append(PipelineUnit("head", -1, params["head"], _head_unit))
+    return units
+
+
+def _apply_compiled(params, x, cfg: ResNetConfig):
+    """Compiled serving path: fused implicit-GEMM convs + the quantization-
+    domain pass — one ``act_quant`` per block, int8 activations between the
+    a/b/c convs AND on every block edge (producer-side quantization: each
+    unit emits ``(int8, scale)``, so slicing the unit list into pipeline
+    stages moves only 8-bit feature maps and cannot change the math).
+    The identity shortcut consumes the quantized block input — the FPGA's
+    shortcut reads the same 8-bit inter-layer map (paper SS II-D.4).
+    """
+    carry = x
+    for u in compiled_units(params, cfg):
+        carry = u.fn(u.params, carry)
+    return carry
 
 
 def apply(params, x, cfg: ResNetConfig):

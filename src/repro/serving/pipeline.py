@@ -1,0 +1,207 @@
+"""Pipeline-parallel ResNet serving engine — persistent per-stage weights,
+microbatched requests, the executable Fig 7.
+
+Mirrors ``serving/engine.py``'s submit/step/run surface for the CNN path:
+requests carry image batches, the engine splits them into fixed-size
+microbatches, and a ``distributed.conv_pipeline.ConvPipeline`` rotates
+the microbatches through per-device stages whose (disjoint) constant
+weights were placed at construction time.
+
+Stage planning accepts, in precedence order:
+
+* ``plan``        — explicit ``partition.StagePlan`` list (or a
+                    ``PartitionResult``, re-balanced to the device count);
+* ``stage_blocks``— an explicit stage map: tuple of block-id tuples;
+* ``n_stages``    — MAC-balanced contiguous split (partition.plan_stages).
+
+Quantization domains are per-microbatch (the engine's unit of work):
+``n_stages=1`` with one microbatch is *bit-identical* to
+``resnet.apply`` on the same images, and any stage count is bit-identical
+to the per-microbatch reference (``reference_logits``) because stage
+boundaries only relocate the int8 edges the single-device compiled
+forward already produces (models/resnet.compiled_units).  Microbatches
+never span requests — one request's logits must not depend on whoever
+shares the queue (per-tensor scales are microbatch-wide).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core import partition
+from repro.core.compiled_linear import compile_params
+from repro.distributed.conv_pipeline import ConvPipeline, PipelineStage
+from repro.models import resnet
+
+
+@dataclasses.dataclass
+class PipelineRequest:
+    rid: int
+    images: np.ndarray                  # (n, H, W, 3) f32
+    logits: np.ndarray | None = None
+    rows_submitted: int = 0
+    rows_done: int = 0
+    done: bool = False
+
+
+def _make_stage_fn(unit_fns):
+    def stage_fn(stage_params, carry):
+        for fn, p in zip(unit_fns, stage_params):
+            carry = fn(p, carry)
+        return carry
+    return jax.jit(stage_fn)
+
+
+def reference_logits(params, cfg, x, microbatch: int):
+    """The single-device compiled path at the engine's microbatch
+    granularity — the bit-identity reference for every stage count.
+
+    Jitted, like the engine's stage programs: slicing the unit list into
+    jitted stages is bit-exact vs the whole-model jit (no float op's
+    fusion pair spans an int8 edge), whereas op-by-op eager execution
+    differs by FMA-contraction ulps from ANY jitted lowering."""
+    fn = jax.jit(lambda p, mb: resnet.apply(p, mb, cfg))
+    mbs = [x[i:i + microbatch] for i in range(0, x.shape[0], microbatch)]
+    return jnp.concatenate([fn(params, mb) for mb in mbs])
+
+
+class PipelineEngine:
+    """Persistent pipeline-parallel serving of the compiled ResNet."""
+
+    def __init__(self, cfg: resnet.ResNetConfig, params, *,
+                 mode: str = "int8", sparsity: float = 0.8,
+                 n_stages: int | None = None, stage_blocks=None, plan=None,
+                 microbatch: int = 2, devices=None):
+        assert mode != "dense", "the pipeline serves the compiled network"
+        self.cfg = cfg
+        self.microbatch = microbatch
+        # params: the boxed training tree (compiled here, like
+        # ServingEngine) or an already-compiled unboxed tree
+        boxed = any(isinstance(l, nn.Param) for l in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, nn.Param)))
+        self.params = nn.unbox(compile_params(params, mode=mode,
+                                              sparsity=sparsity)) \
+            if boxed else params
+        units = resnet.compiled_units(self.params, cfg)
+        n_blocks = len(units) - 1              # head rides the last stage
+        self.plan = self._resolve_plan(plan, stage_blocks, n_stages,
+                                       n_blocks, devices)
+        self.stage_block_ids = [p.block_ids for p in self.plan]
+        devices = self._resolve_devices(devices, len(self.plan))
+        self.pipe = ConvPipeline(
+            self._build_stages(units, self.stage_block_ids, devices))
+        self.queue: list[PipelineRequest] = []
+
+    # -- stage planning -------------------------------------------------
+    def _resolve_plan(self, plan, stage_blocks, n_stages, n_blocks,
+                      devices):
+        blocks = resnet.conv_blocks_for(self.cfg)
+        assert len(blocks) == n_blocks, (len(blocks), n_blocks)
+        if isinstance(plan, partition.PartitionResult):
+            want = n_stages or (len(devices) if devices else None)
+            return plan.stage_plans(blocks, want)
+        if plan is not None:                   # explicit StagePlan list
+            return list(plan)
+        if stage_blocks is not None:           # explicit stage map
+            return partition.explicit_stage_plans(blocks, stage_blocks)
+        return partition.plan_stages(blocks, n_stages or 1)
+
+    @staticmethod
+    def _resolve_devices(devices, n_stages):
+        if devices is None:
+            from repro.launch.mesh import pipeline_stage_devices
+            devices = pipeline_stage_devices(n_stages)
+        assert len(devices) >= n_stages, (len(devices), n_stages)
+        return list(devices[:n_stages])
+
+    def _build_stages(self, units, stage_block_ids, devices):
+        covered = [b for ids in stage_block_ids for b in ids]
+        assert covered == list(range(len(units) - 1)), (
+            "stage map must cover blocks 0..%d contiguously" % (len(units) - 2),
+            stage_block_ids)
+        stages = []
+        for s, ids in enumerate(stage_block_ids):
+            mine = [u for u in units if u.block_id in ids]
+            if s == len(stage_block_ids) - 1:
+                mine.append(units[-1])         # the head
+            # the stage's device holds ONLY these units' constant weights
+            stage_params = jax.device_put(
+                tuple(u.params for u in mine), devices[s])
+            stages.append(PipelineStage(
+                index=s, device=devices[s],
+                fn=_make_stage_fn(tuple(u.fn for u in mine)),
+                params=stage_params,
+                unit_names=tuple(u.name for u in mine)))
+        return stages
+
+    # -- request management --------------------------------------------
+    def submit(self, req: PipelineRequest):
+        req.logits = None
+        req.rows_submitted = req.rows_done = 0
+        req.done = False
+        self.queue.append(req)
+
+    def _next_microbatch(self):
+        """Head-of-queue rows, at most ``microbatch`` of them, never
+        crossing a request boundary (per-microbatch quantization)."""
+        while self.queue:
+            req = self.queue[0]
+            if len(req.images) == 0:           # zero-row request: complete
+                req.logits = np.zeros((0, self.cfg.num_classes), np.float32)
+                req.done = True
+                self.queue.pop(0)
+                continue
+            start = req.rows_submitted
+            if start >= len(req.images):
+                self.queue.pop(0)
+                continue
+            stop = min(start + self.microbatch, len(req.images))
+            req.rows_submitted = stop
+            if stop >= len(req.images):
+                self.queue.pop(0)
+            return (req, start), jnp.asarray(req.images[start:stop],
+                                             jnp.float32)
+        return None, None
+
+    def step(self) -> bool:
+        """Inject one microbatch (if any is queued) and advance the
+        schedule one tick; completed microbatches land in their request's
+        logits.  Returns False once idle."""
+        tag = mb = None
+        if self.pipe.inlet_free:
+            tag, mb = self._next_microbatch()
+        if mb is None and not self.pipe.busy:
+            return False
+        for (req, start), out in self.pipe.tick(inject=mb, tag=tag):
+            out = np.asarray(out)
+            if req.logits is None:
+                req.logits = np.zeros((len(req.images), out.shape[-1]),
+                                      out.dtype)
+            req.logits[start:start + out.shape[0]] = out
+            req.rows_done += out.shape[0]
+            req.done = req.rows_done >= len(req.images)
+        return True
+
+    def run(self, requests: list) -> list:
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return requests
+
+    def run_batch(self, x) -> jnp.ndarray:
+        """Convenience: one anonymous request, returns stacked logits."""
+        req = PipelineRequest(rid=-1, images=np.asarray(x))
+        self.run([req])
+        return jnp.asarray(req.logits)
+
+    def stats(self) -> dict:
+        out = self.pipe.stats()
+        out["microbatch"] = self.microbatch
+        out["stage_blocks"] = [list(ids) for ids in self.stage_block_ids]
+        out["planned_link_bytes"] = [p.link_bytes for p in self.plan[:-1]]
+        return out

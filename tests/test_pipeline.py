@@ -1,0 +1,349 @@
+"""Pipeline-parallel serving subsystem (the executable Fig 7).
+
+Conformance: `PipelineEngine` output must be *bit-identical* to the
+single-device compiled ResNet path (the jitted whole-model forward at the
+same microbatch granularity) for n_stages in {1, 2, 4}, in every serve
+mode, through both the jnp and REPRO_PALLAS=interpret lowerings — the
+`tests/test_serve_modes.py` matrix extended over stage counts.  Plus: the
+per-stage persistent-weights property (disjoint param subtrees), measured
+vs analytic inter-stage link bytes, the greedy packer's oversized-layer
+guard, stage-plan algebra, and a forced-4-device subprocess harness.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.core import partition
+from repro.core.fpga_model import GX280, ConvLayerSpec
+from repro.models import resnet
+from repro.serving.pipeline import (PipelineEngine, PipelineRequest,
+                                    reference_logits)
+
+CFG = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+MODES = [m for m in cl.SERVE_MODES if m != "dense"]
+STAGE_COUNTS = (1, 2, 4)
+
+_params_cache = {}
+
+
+def _compiled(mode):
+    """Compiled tiny-ResNet params, cached per mode (compile once)."""
+    if mode not in _params_cache:
+        params = resnet.init(jax.random.PRNGKey(0), CFG)
+        _params_cache[mode] = nn.unbox(
+            cl.compile_params(params, mode=mode, sparsity=0.5))
+    return _params_cache[mode]
+
+
+def _images(n, seed=1):
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                        (n, CFG.in_hw, CFG.in_hw, 3)))
+
+
+_ref_cache = {}
+
+
+def _reference(mode, lowering, n, microbatch):
+    key = (mode, lowering, n, microbatch)
+    if key not in _ref_cache:
+        _ref_cache[key] = np.asarray(reference_logits(
+            _compiled(mode), CFG, jnp.asarray(_images(n)), microbatch))
+    return _ref_cache[key]
+
+
+# ---------------------------------------------------------------------------
+# Conformance matrix: serve mode x stage count x lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_stages", STAGE_COUNTS)
+@pytest.mark.parametrize("mode", MODES)
+def test_pipeline_bit_identical_jnp(monkeypatch, mode, n_stages):
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    eng = PipelineEngine(CFG, _compiled(mode), mode=mode,
+                         n_stages=n_stages, microbatch=2)
+    out = eng.run_batch(_images(4))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _reference(mode, "jnp", 4, 2))
+    assert len(eng.plan) == n_stages
+    assert eng.stats()["ticks"] == 2 + n_stages - 1    # M + S - 1
+
+
+@pytest.mark.parametrize("n_stages", STAGE_COUNTS)
+@pytest.mark.parametrize("mode", MODES)
+def test_pipeline_bit_identical_interpret(monkeypatch, mode, n_stages):
+    """The same matrix through the Pallas kernels in interpret mode
+    (single image/microbatch — interpret is slow)."""
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    eng = PipelineEngine(CFG, _compiled(mode), mode=mode,
+                         n_stages=n_stages, microbatch=1)
+    out = eng.run_batch(_images(1))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _reference(mode, "interpret", 1, 1))
+
+
+def test_single_stage_degenerates_to_apply(monkeypatch):
+    """n_stages=1 with one whole-batch microbatch IS the single-device
+    compiled path: same values as jit(resnet.apply), bit for bit."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled("int8")
+    x = _images(4)
+    eng = PipelineEngine(CFG, params, mode="int8", n_stages=1, microbatch=4)
+    out = eng.run_batch(x)
+    want = jax.jit(lambda p, a: resnet.apply(p, a, CFG))(params,
+                                                         jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_requests_independent_and_engine_persistent(monkeypatch):
+    """Microbatches never span requests (one request's logits cannot
+    depend on its queue neighbours) and the engine serves wave after wave
+    with its weights staying resident."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled("int8")
+    eng = PipelineEngine(CFG, params, mode="int8", n_stages=2, microbatch=2)
+    x = _images(8)
+    r1 = PipelineRequest(rid=1, images=x[:3])       # odd size: partial mb
+    r2 = PipelineRequest(rid=2, images=x[3:8])
+    eng.run([r1, r2])
+    assert r1.done and r2.done
+    # each request equals ITS OWN per-microbatch reference
+    np.testing.assert_array_equal(
+        r1.logits, np.asarray(reference_logits(params, CFG,
+                                               jnp.asarray(x[:3]), 2)))
+    np.testing.assert_array_equal(
+        r2.logits, np.asarray(reference_logits(params, CFG,
+                                               jnp.asarray(x[3:8]), 2)))
+    # second wave on the same engine: same inputs, same bits
+    r3 = PipelineRequest(rid=3, images=x[:3])
+    eng.run([r3])
+    np.testing.assert_array_equal(r3.logits, r1.logits)
+
+
+def test_zero_row_request_completes(monkeypatch):
+    """A request with no images completes immediately with empty logits
+    instead of hanging undone in the queue."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    eng = PipelineEngine(CFG, _compiled("int8"), mode="int8", n_stages=2,
+                         microbatch=2)
+    req = PipelineRequest(rid=9, images=_images(4)[:0])
+    eng.run([req])
+    assert req.done and req.logits.shape == (0, CFG.num_classes)
+    assert eng.run_batch(_images(4)[:0]).shape == (0, CFG.num_classes)
+
+
+def test_explicit_stage_map_and_partition_plan(monkeypatch):
+    """Both alternate planning paths — an explicit block map and a
+    Fig 7 ``PartitionResult`` — produce conformant engines."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled("int8")
+    want = _reference("int8", "jnp", 4, 2)
+    eng = PipelineEngine(CFG, params, mode="int8", microbatch=2,
+                         stage_blocks=[(0, 1, 2), tuple(range(3, 17))])
+    np.testing.assert_array_equal(np.asarray(eng.run_batch(_images(4))),
+                                  want)
+    blocks = resnet.conv_blocks_for(CFG)
+    result = partition.partition(blocks, 1000.0)
+    eng2 = PipelineEngine(CFG, params, mode="int8", microbatch=2,
+                          n_stages=2, plan=result)
+    assert len(eng2.plan) == 2
+    np.testing.assert_array_equal(np.asarray(eng2.run_batch(_images(4))),
+                                  want)
+
+
+# ---------------------------------------------------------------------------
+# Persistent per-stage weights: disjoint param subtrees (spy)
+# ---------------------------------------------------------------------------
+
+def _leaf_bytes(tree):
+    return sum(l.nbytes for l in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("mode", ["int8", "sparse_cfmm"])
+def test_stage_params_disjoint(monkeypatch, mode):
+    """Each stage holds exactly its own units' constant weights: unit
+    names partition the model, per-stage resident bytes equal the sum of
+    that stage's unit subtrees, and nothing is replicated."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled(mode)
+    eng = PipelineEngine(CFG, params, mode=mode, n_stages=4, microbatch=2)
+    units = resnet.compiled_units(params, CFG)
+    unit_bytes = {u.name: _leaf_bytes(u.params) for u in units}
+    seen = []
+    for stage in eng.pipe.stages:
+        seen.extend(stage.unit_names)
+        assert stage.weight_bytes() == sum(
+            unit_bytes[n] for n in stage.unit_names)
+    assert sorted(seen) == sorted(unit_bytes)          # disjoint + complete
+    assert sum(st.weight_bytes() for st in eng.pipe.stages) == \
+        _leaf_bytes([u.params for u in units])
+    # conv leaves specifically: every compiled conv leaf lives on exactly
+    # one stage
+    def conv_leaf_count(tree):
+        flat, _ = jax.tree.flatten(
+            tree, is_leaf=lambda t: isinstance(t, dict) and "geom" in t)
+        return sum(1 for leaf in flat
+                   if isinstance(leaf, dict) and "geom" in leaf)
+    total = conv_leaf_count(params)
+    assert total == sum(conv_leaf_count(st.params)
+                        for st in eng.pipe.stages)
+
+
+# ---------------------------------------------------------------------------
+# Link bytes: measured == executable plan == Fig 7 analytic
+# ---------------------------------------------------------------------------
+
+def test_edge_bytes_measured_vs_analytic(monkeypatch):
+    """The int8 payload the executed pipeline actually moves on each edge
+    equals StagePlan.link_bytes x microbatch, and those link byte counts
+    agree with PartitionResult.link_gbps' analytic accounting at the
+    matching chip boundaries."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    mb = 2
+    blocks = resnet.conv_blocks_for(CFG)
+    result = partition.partition(blocks, 1000.0)
+    plans = result.stage_plans(blocks)                 # chip-aligned
+    eng = PipelineEngine(CFG, _compiled("int8"), mode="int8",
+                         plan=plans, microbatch=mb)
+    eng.run_batch(_images(4))
+    st = eng.stats()
+    for e, measured in enumerate(st["edge_bytes"]):
+        assert measured["int8_bytes"] == plans[e].link_bytes * mb, (
+            e, measured, plans[e])
+        assert measured["meta_bytes"] == 4             # one f32 scale
+    # analytic cross-check: a stage boundary that coincides with a chip
+    # boundary carries the chip link's bytes (the stem edge is the
+    # documented exception: the executed link is post-maxpool, /4)
+    chip_of = {}
+    for chip in result.chips:
+        for p in chip.layers:
+            chip_of.setdefault(p["layer"], chip.index)
+    for plan in plans[:-1]:
+        last_block = blocks[plan.block_ids[-1]]
+        chip = chip_of[last_block[0].name]
+        chip_last = result.chips[chip].layers[-1]["spec"]
+        if chip_last.name == last_block[-1].name:      # aligned boundary
+            want = chip_last.out_bytes
+            if plan.block_ids[-1] == 0:
+                want //= 4                             # stride-2 maxpool
+            assert plan.link_bytes == want
+            if plan.block_ids[-1] != 0:
+                assert abs(plan.link_gbps(result.achieved_im_s)
+                           - result.link_gbps[chip]) < 1e-9
+
+
+def test_edge_bytes_after_block():
+    blocks = resnet.resnet50_conv_blocks()
+    # stem: conv1 makes a 112x112x64 map, the executable edge is pooled
+    assert partition.edge_bytes_after_block(blocks, 0) == 56 * 56 * 64
+    # a conv2_x block edge: 56x56x256 int8
+    assert partition.edge_bytes_after_block(blocks, 1) == 56 * 56 * 256
+    # last conv5_x block: 7x7x2048
+    assert partition.edge_bytes_after_block(blocks, 16) == 7 * 7 * 2048
+
+
+# ---------------------------------------------------------------------------
+# Stage-plan algebra + the greedy packer guard
+# ---------------------------------------------------------------------------
+
+def test_split_stages_properties():
+    costs = [3, 1, 4, 1, 5, 9, 2, 6]
+    for n in (1, 2, 3, 5, 8, 20):
+        groups = partition.split_stages(costs, n)
+        assert [i for g in groups for i in g] == list(range(len(costs)))
+        assert len(groups) == min(n, len(costs))
+        assert all(g for g in groups)
+
+
+def test_plan_stages_balance_and_links():
+    blocks = resnet.resnet50_conv_blocks()
+    total_macs = sum(l.macs for blk in blocks for l in blk)
+    for n in (1, 2, 4):
+        plans = partition.plan_stages(blocks, n)
+        assert len(plans) == n
+        assert sum(p.macs for p in plans) == total_macs
+        assert plans[-1].link_bytes == 0
+        for p in plans[:-1]:
+            assert p.link_bytes == partition.edge_bytes_after_block(
+                blocks, p.block_ids[-1])
+        ids = [i for p in plans for i in p.block_ids]
+        assert ids == list(range(len(blocks)))
+
+
+def test_stage_plans_from_fig7_partition():
+    blocks = resnet.resnet50_conv_blocks()
+    result = partition.partition(blocks, 10_000.0)
+    plans = result.stage_plans(blocks)
+    ids = [i for p in plans for i in p.block_ids]
+    assert ids == list(range(len(blocks)))             # block-aligned
+    assert all(p.alms > 0 for p in plans)
+    coalesced = result.stage_plans(blocks, 4)
+    assert len(coalesced) == 4
+    assert sum(p.macs for p in coalesced) == sum(p.macs for p in plans)
+
+
+def test_partition_oversized_layer_guard():
+    """A layer whose single kernel instance exceeds the usable fabric at
+    the model's maximum fold must raise, not emit >100%-utilized chips
+    (the old packer reported 200% utilization as success)."""
+    huge = ConvLayerSpec("huge", 4096, 4096, 3, 56)
+    with pytest.raises(partition.PartitionError, match="huge"):
+        partition.partition([[huge]], 53_061.0)
+    # the guard does not fire for anything in the paper's own network
+    result = partition.partition(resnet.resnet50_conv_blocks(), 53_061.0)
+    cap = GX280.usable_alms(0.76)
+    assert all(c.alms_used <= cap + 1e-6 for c in result.chips)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device harness (forced 4-device CPU fan-out, subprocess)
+# ---------------------------------------------------------------------------
+
+_MULTIDEV_SCRIPT = r"""
+import jax, numpy as np, jax.numpy as jnp
+from repro import nn
+from repro.core.compiled_linear import compile_params
+from repro.models import resnet
+from repro.serving.pipeline import PipelineEngine, reference_logits
+
+assert len(jax.devices()) == 4, jax.devices()
+cfg = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+params = nn.unbox(compile_params(resnet.init(jax.random.PRNGKey(0), cfg),
+                                 mode="int8"))
+x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3)))
+eng = PipelineEngine(cfg, params, mode="int8", n_stages=4, microbatch=1)
+devs = {str(s.device) for s in eng.pipe.stages}
+assert len(devs) == 4, devs                       # one stage per device
+for s in eng.pipe.stages:                         # weights live on-stage
+    for leaf in jax.tree.leaves(s.params):
+        assert list(leaf.devices())[0] == s.device, (s.index, leaf.devices())
+out = eng.run_batch(x)
+ref = reference_logits(params, cfg, jnp.asarray(x), 1)
+np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+print("MULTIDEV_OK", sorted(devs))
+"""
+
+
+def test_pipeline_on_four_forced_devices():
+    """Real multi-device placement: stage params committed to 4 distinct
+    CPU devices, int8 edges crossing devices, output bit-identical to the
+    single-device reference.  Subprocess because device count is fixed at
+    backend init (the in-process suite must keep seeing one device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4")
+    env["REPRO_PALLAS"] = "jnp"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")] +
+        env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                          capture_output=True, text=True, timeout=300,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "MULTIDEV_OK" in proc.stdout
