@@ -19,7 +19,8 @@ import time
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT_DIR = ROOT / "experiments" / "bench"
 
-SMOKE_SECTIONS = ("table1_design_params", "conv", "sparse_conv", "pipeline")
+SMOKE_SECTIONS = ("table1_design_params", "conv", "sparse_conv",
+                  "pipeline", "frontend")
 
 
 def _git_sha() -> str:
@@ -57,8 +58,8 @@ def main(argv=None) -> None:
                     help=f"quick CI subset: {', '.join(SMOKE_SECTIONS)}")
     args = ap.parse_args(argv)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    from benchmarks import fig7, kernel_bench, pipeline_bench, \
-        roofline_table, serving_bench, table1, table2
+    from benchmarks import fig7, frontend_bench, kernel_bench, \
+        pipeline_bench, roofline_table, serving_bench, table1, table2
 
     sections = [("table1_design_params", table1.run),
                 ("table2_kernel_results", table2.run),
@@ -68,6 +69,7 @@ def main(argv=None) -> None:
                 ("conv", kernel_bench.run_conv),
                 ("sparse_conv", kernel_bench.run_sparse_conv),
                 ("pipeline", pipeline_bench.run),
+                ("frontend", frontend_bench.run),
                 ("serving_bench", serving_bench.run)]
     if args.smoke:
         sections = [s for s in sections if s[0] in SMOKE_SECTIONS]

@@ -368,3 +368,15 @@ def compile_params(params, mode: str = "sparse_cfmm", sparsity: float = 0.8):
         return p
 
     return jax.tree.map(visit, params, is_leaf=lambda x: isinstance(x, nn.Param))
+
+
+def ensure_compiled(params, mode: str, sparsity: float):
+    """The serving engines' front door: a boxed training tree compiles
+    (and unboxes) to its constant-parameter form; an already-compiled
+    unboxed tree passes through UNTOUCHED — callers may rely on the
+    identity (``out is params``) to share one host-side tree across
+    engines (serving/frontend.py does)."""
+    boxed = any(isinstance(l, nn.Param) for l in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, nn.Param)))
+    return nn.unbox(compile_params(params, mode=mode, sparsity=sparsity)) \
+        if boxed else params

@@ -79,8 +79,9 @@ class ConvPipeline:
     fill/steady/drain loop and consumes ``stats()``.
     """
 
-    def __init__(self, stages: list):
+    def __init__(self, stages: list, replica: int = 0):
         self.stages = stages
+        self.replica = replica          # which fleet replica owns this chain
         self.n_stages = len(stages)
         self._inlet = [None] * self.n_stages    # per-stage input buffer
         self._tags = [None] * self.n_stages
@@ -133,11 +134,32 @@ class ConvPipeline:
     def inlet_free(self) -> bool:
         return self._inlet[0] is None
 
+    def reset_counters(self):
+        """Zero the schedule counters (ticks, microbatches done — the
+        bubble-fraction basis) so the next wave's stats stand alone;
+        only legal while idle, since mid-flight microbatches would
+        straddle the accounting boundary."""
+        assert not self.busy, "reset_counters with microbatches in flight"
+        self.ticks = 0
+        self.microbatches_done = 0
+
+    @property
+    def in_flight(self) -> int:
+        """Microbatches currently buffered in stage inlets — the chain's
+        occupancy (a full chain holds ``n_stages``; 0 means idle),
+        surfaced in ``stats()``.  The serving front-end's least-loaded
+        router uses the row-granular ``PipelineEngine.pending_rows``
+        instead, which counts partial microbatches at their real size;
+        ``inlet_free`` gates injection."""
+        return sum(b is not None for b in self._inlet)
+
     def stats(self) -> dict:
         s, m = self.n_stages, self.microbatches_done
         total = s * self.ticks
         return {
+            "replica": self.replica,
             "n_stages": s,
+            "in_flight": self.in_flight,
             "microbatches": m,
             "ticks": self.ticks,
             "bubble_fraction": 1.0 - (s * m) / total if total else 0.0,

@@ -46,3 +46,23 @@ def pipeline_stage_devices(n_stages: int, devices=None) -> list:
     """
     devices = list(jax.devices()) if devices is None else list(devices)
     return [devices[s % len(devices)] for s in range(n_stages)]
+
+
+def replica_pipeline_devices(n_replicas: int, n_stages: int,
+                             devices=None) -> list:
+    """Disjoint per-replica device groups for the replicated serving
+    front-end (serving/frontend.py): ``n_replicas`` independent stage
+    chains of ``n_stages`` devices each, carved contiguously from the
+    local device list — replica ``r`` owns devices
+    ``[r*n_stages, (r+1)*n_stages)``, so no device (and no resident
+    weight byte) is shared between replicas when ``n_replicas*n_stages``
+    physical devices exist.  With fewer devices the groups wrap
+    round-robin, exactly like ``pipeline_stage_devices`` — correctness
+    is placement-independent (only throughput changes), so the whole
+    fleet degenerates to one CPU device in tests.  Fan a CPU host out
+    with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    """
+    assert n_replicas >= 1 and n_stages >= 1, (n_replicas, n_stages)
+    devices = list(jax.devices()) if devices is None else list(devices)
+    return [[devices[(r * n_stages + s) % len(devices)]
+             for s in range(n_stages)] for r in range(n_replicas)]

@@ -25,7 +25,9 @@ Two forward paths (DESIGN.md §4):
   function of its own param subtree with producer-side quantization, so
   every unit edge is an ``(int8, scale)`` pair and the pipeline-parallel
   engine (serving/pipeline.py) slices the unit list into per-device
-  stages bit-identically (DESIGN.md §7).  In
+  stages bit-identically (DESIGN.md §7) — the replicated front-end
+  (serving/frontend.py, DESIGN.md §8) reuses the same units unchanged:
+  replication happens at the engine layer, never in the model.  In
   ``sparse_cfmm`` mode the weight leaves are bitmap-packed and the same
   seam dispatches to the bitmap-native sparse conv kernel
   (``kernels/conv_sparse.py``) — this file needs no sparse-specific code;

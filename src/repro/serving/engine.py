@@ -77,7 +77,36 @@ class ServingEngine:
 
     # -- request management --------------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) > self.max_seq:
+            # _prefill_one writes all L prompt tokens into a (1, bucket)
+            # buffer whose bucket is capped at max_seq — reject at the
+            # front door instead of shape-erroring deep in numpy
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds the engine's "
+                f"max_seq={self.max_seq}; truncate the prompt or build "
+                f"the engine with a larger max_seq")
+        if len(req.prompt) + req.max_new_tokens - 1 > self.max_seq:
+            # decode token i lands at cache position L + i - 2: past
+            # max_seq, dynamic_update_slice CLAMPS the index and silently
+            # corrupts the last cache slot — reject the budget up front
+            # (an early EOS could have fit, but silent corruption on the
+            # no-EOS path is the worse failure)
+            raise ValueError(
+                f"prompt length {len(req.prompt)} + max_new_tokens "
+                f"{req.max_new_tokens} - 1 exceeds max_seq="
+                f"{self.max_seq}; the decode budget would overrun the "
+                f"cache — shorten one or raise max_seq")
         self.queue.append(req)
+
+    @staticmethod
+    def _check_done(req: Request) -> bool:
+        """Done-conditions shared by prefill and decode: token budget
+        spent, or the latest token is EOS."""
+        if (len(req.tokens_out) >= req.max_new_tokens or
+                (req.eos_id is not None and req.tokens_out and
+                 req.tokens_out[-1] == req.eos_id)):
+            req.done = True
+        return req.done
 
     def _prefill_fn(self, bucket: int):
         """The compiled prefill program for a length bucket (LRU)."""
@@ -114,12 +143,20 @@ class ServingEngine:
         self.cache = _merge_slot_cache(self.cache, cache1, slot)
 
     def step(self):
-        """Admit queued requests into free slots, then one decode step."""
+        """Admit queued requests into free slots, then one decode step.
+
+        Done-conditions are checked right after prefill (which already
+        produced one token): a ``max_new_tokens=1`` request or a
+        prefill-produced EOS completes immediately and frees the slot
+        for the next queued request *before* any decode step — the old
+        path unconditionally decoded once more, overshooting the token
+        budget and ignoring a prefill EOS."""
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
+            while self.active[slot] is None and self.queue:
                 req = self.queue.popleft()
                 self._prefill_one(slot, req)
-                self.active[slot] = req
+                if not self._check_done(req):
+                    self.active[slot] = req
         if not any(self.active):
             return False
         last = np.zeros((self.slots, 1), np.int32)
@@ -132,11 +169,8 @@ class ServingEngine:
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            tok = int(nxt[slot])
-            req.tokens_out.append(tok)
-            if (len(req.tokens_out) >= req.max_new_tokens or
-                    (req.eos_id is not None and tok == req.eos_id)):
-                req.done = True
+            req.tokens_out.append(int(nxt[slot]))
+            if self._check_done(req):
                 self.active[slot] = None
         return True
 

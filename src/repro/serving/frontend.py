@@ -1,0 +1,202 @@
+"""Replicated-pipeline serving front-end — many Fig 7 chains behind one
+front door.
+
+The paper's deployment story does not stop at one multi-chip pipeline:
+"heavy traffic from millions of users" means N *data-parallel replicas*
+of the layer-pipelined network running over disjoint device groups, the
+same scale-out move HPIPE makes across independent device clusters.  At
+that point the Memory-Efficient Dataflow literature's lesson applies:
+the front door — admission and batching — becomes the bottleneck before
+the kernels do, so it gets its own component.
+
+``ResNetFrontend`` owns the shared request queue and N
+``serving.pipeline.PipelineEngine`` replicas:
+
+* **Replica carving** — ``launch.mesh.replica_pipeline_devices`` splits
+  the local device list into disjoint contiguous groups, one stage chain
+  per replica; every replica holds the FULL network (split over its own
+  stages), and all replicas share ONE host-side compiled param tree —
+  compile once, ``device_put`` per stage (spy-tested in
+  tests/test_frontend.py).
+* **Admission + routing** — requests wait in the front-door queue until
+  the least-loaded replica (by ``PipelineEngine.pending_rows`` — row-
+  granular accounting of unsubmitted queue rows plus rows in flight
+  through the stages) has room under ``admit_rows``; a request is
+  dispatched *whole* to one replica.  (``ConvPipeline.in_flight``
+  surfaces each chain's microbatch occupancy in ``stats()``.)
+* **Quantization-domain safety** — microbatches are packed per request
+  inside one replica (``PipelineEngine._next_microbatch`` never crosses
+  a request), so a request's logits are bit-identical to
+  ``serving.pipeline.reference_logits`` no matter the replica count,
+  arrival order, or interleaving: replicas never share a quantization
+  domain, and neither do queue neighbours (DESIGN.md §8).
+* **Accounting** — queue depth (current + max), per-replica bubble and
+  rows dispatched, and wall-clock request latency (submit -> done)
+  reported as p50/p95.
+
+Surface mirrors the existing engines: ``submit`` / ``step`` / ``run`` /
+``stats`` (plus ``run_batch`` for one anonymous request).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.compiled_linear import ensure_compiled
+from repro.launch.mesh import replica_pipeline_devices
+from repro.models import resnet
+from repro.serving.pipeline import PipelineEngine, PipelineRequest
+
+
+@dataclasses.dataclass
+class FrontendRequest(PipelineRequest):
+    """A ``PipelineRequest`` plus the front-end's lifecycle accounting."""
+    replica: int | None = None          # assigned at dispatch
+    t_submit: float | None = None
+    t_done: float | None = None
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+
+def _percentile(xs: list, q: float) -> float | None:
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
+
+
+class ResNetFrontend:
+    """Admission queue + least-loaded routing over N pipeline replicas."""
+
+    def __init__(self, cfg: resnet.ResNetConfig, params, *,
+                 mode: str = "int8", sparsity: float = 0.8,
+                 n_replicas: int = 2, n_stages: int = 1,
+                 stage_blocks=None, plan=None, microbatch: int = 2,
+                 devices=None, admit_rows: int | None = None):
+        assert n_replicas >= 1, n_replicas
+        self.cfg = cfg
+        self.microbatch = microbatch
+        # compile ONCE; every replica shares this host-side tree and only
+        # device_puts its own stages' subtrees onto its device group
+        self.params = ensure_compiled(params, mode, sparsity)
+        groups = replica_pipeline_devices(n_replicas, n_stages,
+                                          devices=devices)
+        self.replicas = [
+            PipelineEngine(cfg, self.params, mode=mode, sparsity=sparsity,
+                           n_stages=n_stages, stage_blocks=stage_blocks,
+                           plan=plan, microbatch=microbatch,
+                           devices=groups[r], replica=r)
+            for r in range(n_replicas)]
+        # front door: a replica chain absorbs n_stages in-flight
+        # microbatches; double that before the queue holds requests back
+        self.admit_rows = (2 * n_stages * microbatch
+                           if admit_rows is None else admit_rows)
+        assert self.admit_rows >= 1, (
+            "admit_rows must be >= 1 — 0 would deadlock the front door "
+            "(an idle replica could never be handed work)", admit_rows)
+        self.queue: deque = deque()
+        self._inflight: list = []
+        self.rows_dispatched = [0] * n_replicas
+        self.requests_dispatched = [0] * n_replicas
+        self.max_queue_depth = 0
+        self._latencies: list[float] = []
+        self.requests_done = 0
+
+    # -- request management --------------------------------------------
+    def submit(self, req):
+        """Admit a request into the front-door queue (routing happens at
+        ``step`` time, when replica load is current)."""
+        req.logits = None
+        req.done = False
+        req.replica = None
+        req.t_submit = time.perf_counter()
+        req.t_done = None
+        self.queue.append(req)
+        self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
+
+    def _dispatch(self):
+        """Route head-of-queue requests to the least-loaded replica while
+        it has room under ``admit_rows`` — FIFO order, whole requests
+        only (per-request microbatch packing lives in the engine)."""
+        while self.queue:
+            loads = [eng.pending_rows for eng in self.replicas]
+            r = int(np.argmin(loads))
+            if loads[r] >= self.admit_rows:
+                return                      # backpressure: hold the door
+            req = self.queue.popleft()
+            req.replica = r
+            self.replicas[r].submit(req)
+            self.rows_dispatched[r] += len(req.images)
+            self.requests_dispatched[r] += 1
+            self._inflight.append(req)
+
+    def _collect(self):
+        done, still = [], []
+        for req in self._inflight:
+            (done if req.done else still).append(req)
+        now = time.perf_counter()
+        for req in done:
+            req.t_done = now
+            self._latencies.append(req.t_done - req.t_submit)
+        self._inflight = still                 # one linear pass per step
+        self.requests_done += len(done)
+        return done
+
+    def step(self) -> bool:
+        """Dispatch what the replicas can absorb, advance every replica
+        one tick, and harvest completed requests.  Returns False once the
+        whole fleet is idle."""
+        self._dispatch()
+        busy = False
+        for eng in self.replicas:
+            busy = eng.step() or busy
+        self._collect()
+        return busy or bool(self.queue) or bool(self._inflight)
+
+    def run(self, requests: list) -> list:
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return requests
+
+    def run_batch(self, x) -> np.ndarray:
+        """Convenience: one anonymous request, returns stacked logits."""
+        req = FrontendRequest(rid=-1, images=np.asarray(x))
+        self.run([req])
+        return np.asarray(req.logits)
+
+    # -- accounting -----------------------------------------------------
+    def reset_stats(self):
+        """Zero the lifecycle counters (latency samples, queue-depth
+        high-water mark, dispatch tallies, and each replica's schedule
+        tick/bubble basis) without touching the replicas' compiled state
+        — benches call this between measured waves, while idle."""
+        self._latencies.clear()
+        self.max_queue_depth = len(self.queue)
+        self.requests_done = 0
+        self.rows_dispatched = [0] * len(self.replicas)
+        self.requests_dispatched = [0] * len(self.replicas)
+        for eng in self.replicas:
+            eng.pipe.reset_counters()
+
+    def stats(self) -> dict:
+        reps = [eng.stats() for eng in self.replicas]
+        return {
+            "n_replicas": len(self.replicas),
+            "microbatch": self.microbatch,
+            "admit_rows": self.admit_rows,
+            "queue_depth": len(self.queue),
+            "max_queue_depth": self.max_queue_depth,
+            "requests_done": self.requests_done,
+            "rows_dispatched": list(self.rows_dispatched),
+            "requests_dispatched": list(self.requests_dispatched),
+            "latency_p50_s": _percentile(self._latencies, 50),
+            "latency_p95_s": _percentile(self._latencies, 95),
+            "replica_bubble": [s["bubble_fraction"] for s in reps],
+            "replicas": reps,
+        }

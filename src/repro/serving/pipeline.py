@@ -31,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import nn
 from repro.core import partition
-from repro.core.compiled_linear import compile_params
+from repro.core.compiled_linear import ensure_compiled
 from repro.distributed.conv_pipeline import ConvPipeline, PipelineStage
 from repro.models import resnet
 
@@ -75,17 +74,13 @@ class PipelineEngine:
     def __init__(self, cfg: resnet.ResNetConfig, params, *,
                  mode: str = "int8", sparsity: float = 0.8,
                  n_stages: int | None = None, stage_blocks=None, plan=None,
-                 microbatch: int = 2, devices=None):
+                 microbatch: int = 2, devices=None, replica: int = 0):
         assert mode != "dense", "the pipeline serves the compiled network"
         self.cfg = cfg
         self.microbatch = microbatch
         # params: the boxed training tree (compiled here, like
         # ServingEngine) or an already-compiled unboxed tree
-        boxed = any(isinstance(l, nn.Param) for l in jax.tree.leaves(
-            params, is_leaf=lambda x: isinstance(x, nn.Param)))
-        self.params = nn.unbox(compile_params(params, mode=mode,
-                                              sparsity=sparsity)) \
-            if boxed else params
+        self.params = ensure_compiled(params, mode, sparsity)
         units = resnet.compiled_units(self.params, cfg)
         n_blocks = len(units) - 1              # head rides the last stage
         self.plan = self._resolve_plan(plan, stage_blocks, n_stages,
@@ -93,8 +88,10 @@ class PipelineEngine:
         self.stage_block_ids = [p.block_ids for p in self.plan]
         devices = self._resolve_devices(devices, len(self.plan))
         self.pipe = ConvPipeline(
-            self._build_stages(units, self.stage_block_ids, devices))
+            self._build_stages(units, self.stage_block_ids, devices),
+            replica=replica)
         self.queue: list[PipelineRequest] = []
+        self._rows_in_flight = 0
 
     # -- stage planning -------------------------------------------------
     def _resolve_plan(self, plan, stage_blocks, n_stages, n_blocks,
@@ -176,6 +173,8 @@ class PipelineEngine:
             tag, mb = self._next_microbatch()
         if mb is None and not self.pipe.busy:
             return False
+        if mb is not None:
+            self._rows_in_flight += int(mb.shape[0])
         for (req, start), out in self.pipe.tick(inject=mb, tag=tag):
             out = np.asarray(out)
             if req.logits is None:
@@ -184,6 +183,7 @@ class PipelineEngine:
             req.logits[start:start + out.shape[0]] = out
             req.rows_done += out.shape[0]
             req.done = req.rows_done >= len(req.images)
+            self._rows_in_flight -= out.shape[0]
         return True
 
     def run(self, requests: list) -> list:
@@ -192,6 +192,16 @@ class PipelineEngine:
         while self.step():
             pass
         return requests
+
+    @property
+    def pending_rows(self) -> int:
+        """Rows accepted but not yet delivered: the queue's unsubmitted
+        rows plus the exact rows still rotating through the stages
+        (partial microbatches count their real size) — the load metric
+        ``serving.frontend.ResNetFrontend``'s least-loaded router
+        compares across replicas."""
+        queued = sum(len(r.images) - r.rows_submitted for r in self.queue)
+        return queued + self._rows_in_flight
 
     def run_batch(self, x) -> jnp.ndarray:
         """Convenience: one anonymous request, returns stacked logits."""

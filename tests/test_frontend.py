@@ -1,0 +1,336 @@
+"""Replicated-pipeline serving front-end (serving/frontend.py).
+
+Conformance: every request's logits must be *bit-identical* to
+``serving.pipeline.reference_logits`` at the engine's microbatch
+granularity for every (n_replicas, n_stages, serve mode) cell, no matter
+the arrival order or how requests interleave mid-flight — replicas never
+share a quantization domain and neither do queue neighbours.  Plus: the
+shared host-side compiled tree / per-group disjoint stage subtree spies,
+least-loaded routing + admission backpressure, latency accounting, and a
+forced-4-device subprocess harness (2 replicas x 2 stages on disjoint
+device groups).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.launch.mesh import replica_pipeline_devices
+from repro.models import resnet
+from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.pipeline import reference_logits
+
+CFG = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+MODES = ("int8", "sparse_cfmm")
+MB = 2
+
+_params_cache = {}
+
+
+def _compiled(mode):
+    if mode not in _params_cache:
+        params = resnet.init(jax.random.PRNGKey(0), CFG)
+        _params_cache[mode] = nn.unbox(
+            cl.compile_params(params, mode=mode, sparsity=0.5))
+    return _params_cache[mode]
+
+
+def _images(n, seed=1):
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                        (n, CFG.in_hw, CFG.in_hw, 3)))
+
+
+_ref_cache = {}
+
+
+def _reference(mode, images, microbatch):
+    """Per-request reference, cached by content so the matrix doesn't
+    recompile the whole-model jit for every (cell, request) pair."""
+    key = (mode, microbatch, os.environ.get("REPRO_PALLAS"),
+           images.tobytes())
+    if key not in _ref_cache:
+        _ref_cache[key] = np.asarray(reference_logits(
+            _compiled(mode), CFG, jnp.asarray(images), microbatch))
+    return _ref_cache[key]
+
+
+def _check_vs_reference(reqs, mode, microbatch=MB):
+    for r in reqs:
+        assert r.done
+        np.testing.assert_array_equal(
+            np.asarray(r.logits), _reference(mode, r.images, microbatch))
+
+
+# ---------------------------------------------------------------------------
+# Conformance matrix: replicas x stages x serve mode, arrival orders
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_stages", (1, 2))
+@pytest.mark.parametrize("n_replicas", (1, 2))
+@pytest.mark.parametrize("mode", MODES)
+def test_fleet_bit_identical_jnp(monkeypatch, mode, n_replicas, n_stages):
+    """Every request equals its own per-microbatch reference — replica
+    count, stage count, routing, and queue neighbours cannot change a
+    single bit.  (Arrival order and mid-flight interleaving are swept in
+    the dedicated tests below; microbatch-boundary odd sizes too.)"""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    x = _images(8)
+    fe = ResNetFrontend(CFG, _compiled(mode), mode=mode,
+                        n_replicas=n_replicas, n_stages=n_stages,
+                        microbatch=MB)
+    reqs = [FrontendRequest(rid=i, images=x[a:b])
+            for i, (a, b) in enumerate([(0, 4), (4, 6), (6, 8)])]
+    fe.run(reqs)
+    _check_vs_reference(reqs, mode)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_replicas", (1, 2))
+@pytest.mark.parametrize("mode", MODES)
+def test_fleet_bit_identical_interpret(monkeypatch, mode, n_replicas):
+    """The fleet through the Pallas kernels in interpret mode (single
+    image/microbatch, 2 stages — interpret is slow; the full lowering
+    matrix for the stage programs themselves lives in test_pipeline.py,
+    and routing above them is lowering-independent)."""
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    fe = ResNetFrontend(CFG, _compiled(mode), mode=mode,
+                        n_replicas=n_replicas, n_stages=2, microbatch=1)
+    reqs = [FrontendRequest(rid=i, images=_images(1, seed=i))
+            for i in range(2)]
+    fe.run(reqs)
+    _check_vs_reference(reqs, mode, microbatch=1)
+
+
+def test_arrival_order_and_interleaving_do_not_change_bits(monkeypatch):
+    """The same requests through opposite arrival orders AND a wave
+    submitted mid-flight (odd sizes, so partial microbatches ride along):
+    every request always matches its own reference."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    x = _images(10)
+    sizes = [(0, 3), (3, 4), (4, 9), (9, 10)]
+    outs = {}
+    for order in (1, -1):
+        fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8",
+                            n_replicas=2, n_stages=2, microbatch=MB)
+        reqs = [FrontendRequest(rid=i, images=x[a:b])
+                for i, (a, b) in enumerate(sizes)][::order]
+        early, late = reqs[:2], reqs[2:]
+        for r in early:
+            fe.submit(r)
+        for _ in range(3):                     # partially drain
+            fe.step()
+        for r in late:                         # interleave mid-flight
+            fe.submit(r)
+        while fe.step():
+            pass
+        _check_vs_reference(reqs, "int8")
+        outs[order] = {r.rid: np.asarray(r.logits) for r in reqs}
+    for rid in outs[1]:
+        np.testing.assert_array_equal(outs[1][rid], outs[-1][rid])
+
+
+def test_zero_row_request_completes(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,
+                        microbatch=MB)
+    req = FrontendRequest(rid=0, images=_images(4)[:0])
+    fe.run([req])
+    assert req.done and req.logits.shape == (0, CFG.num_classes)
+    assert req.latency_s is not None
+
+
+# ---------------------------------------------------------------------------
+# Shared host tree + disjoint per-group stage subtrees (spies)
+# ---------------------------------------------------------------------------
+
+def _leaf_bytes(tree):
+    return sum(l.nbytes for l in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_replicas_share_host_tree_and_split_stage_subtrees(monkeypatch,
+                                                           mode):
+    """The fleet compiles ONE host-side param tree (every replica engine
+    aliases it), and each replica's device group holds exactly its own
+    stages' unit subtrees — the model is divided over a replica's stages
+    and replicated only across replicas."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled(mode)
+    fe = ResNetFrontend(CFG, params, mode=mode, n_replicas=2, n_stages=2,
+                        microbatch=MB)
+    units = resnet.compiled_units(params, CFG)
+    unit_bytes = {u.name: _leaf_bytes(u.params) for u in units}
+    for eng in fe.replicas:
+        assert eng.params is fe.params         # one compiled tree, aliased
+        seen = []
+        for stage in eng.pipe.stages:
+            seen.extend(stage.unit_names)
+            assert stage.weight_bytes() == sum(
+                unit_bytes[n] for n in stage.unit_names)
+        assert sorted(seen) == sorted(unit_bytes)  # disjoint + complete
+    # boxed params also compile exactly once, at the front door
+    boxed = resnet.init(jax.random.PRNGKey(0), CFG)
+    fe2 = ResNetFrontend(CFG, boxed, mode=mode, sparsity=0.5,
+                         n_replicas=2, microbatch=MB)
+    assert all(eng.params is fe2.params for eng in fe2.replicas)
+
+
+def test_replica_device_carving():
+    """replica_pipeline_devices carves contiguous disjoint groups when
+    the devices exist and wraps round-robin when they don't."""
+    devs = list("abcdefgh")                    # placement is list-agnostic
+    groups = replica_pipeline_devices(2, 3, devices=devs)
+    assert groups == [["a", "b", "c"], ["d", "e", "f"]]
+    flat = [d for g in groups for d in g]
+    assert len(set(flat)) == len(flat)         # disjoint
+    wrapped = replica_pipeline_devices(3, 2, devices=devs[:4])
+    assert wrapped == [["a", "b"], ["c", "d"], ["a", "b"]]
+
+
+# ---------------------------------------------------------------------------
+# Routing, backpressure, accounting
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_routing_spreads_requests(monkeypatch):
+    """Two same-size requests land on different replicas (the second
+    sees replica 0 loaded), and the dispatch tallies say so."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,
+                        microbatch=MB)
+    reqs = [FrontendRequest(rid=i, images=_images(4, seed=i))
+            for i in range(2)]
+    fe.run(reqs)
+    assert sorted(r.replica for r in reqs) == [0, 1]
+    st = fe.stats()
+    assert st["rows_dispatched"] == [4, 4]
+    assert st["requests_dispatched"] == [1, 1]
+
+
+def test_admission_backpressure_holds_queue(monkeypatch):
+    """With more offered rows than the fleet can absorb, the front door
+    holds requests in ITS queue (bounded replica inlets) and still
+    drains everything correctly."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,
+                        n_stages=1, microbatch=MB, admit_rows=2)
+    reqs = [FrontendRequest(rid=i, images=_images(2, seed=i))
+            for i in range(6)]
+    for r in reqs:
+        fe.submit(r)
+    assert len(fe.queue) == 6                  # nothing dispatched yet
+    fe.step()
+    assert len(fe.queue) > 0                   # held back, not dumped
+    assert max(eng.pending_rows for eng in fe.replicas) <= 2 + MB
+    while fe.step():
+        pass
+    _check_vs_reference(reqs, "int8")
+    st = fe.stats()
+    assert st["max_queue_depth"] == 6 and st["queue_depth"] == 0
+    assert st["requests_done"] == 6
+
+
+def test_admit_rows_validated_and_partial_mb_load_exact(monkeypatch):
+    """admit_rows=0 would deadlock the front door (an idle replica could
+    never be handed work) — rejected at construction; and pending_rows
+    counts a partial microbatch at its REAL size, so routing sees true
+    load under ragged request sizes."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled("int8")
+    with pytest.raises(AssertionError, match="admit_rows"):
+        ResNetFrontend(CFG, params, mode="int8", n_replicas=2,
+                       microbatch=MB, admit_rows=0)
+    fe = ResNetFrontend(CFG, params, mode="int8", n_replicas=1,
+                        n_stages=2, microbatch=MB)
+    eng = fe.replicas[0]
+    eng.submit(FrontendRequest(rid=0, images=_images(1)))  # 1 row, mb=2
+    assert eng.pending_rows == 1
+    eng.step()                                 # now in flight, stage 0
+    assert eng.pending_rows == 1               # exact, not rounded to mb
+    while eng.step():
+        pass
+    assert eng.pending_rows == 0
+
+
+def test_stats_latency_and_replica_accounting(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,
+                        n_stages=2, microbatch=MB)
+    reqs = [FrontendRequest(rid=i, images=_images(2, seed=i))
+            for i in range(4)]
+    fe.run(reqs)
+    st = fe.stats()
+    assert st["n_replicas"] == 2
+    assert len(st["replica_bubble"]) == 2
+    assert len(st["replicas"]) == 2
+    assert [s["replica"] for s in st["replicas"]] == [0, 1]
+    assert all(s["in_flight"] == 0 for s in st["replicas"])
+    assert st["latency_p50_s"] is not None
+    assert st["latency_p95_s"] >= st["latency_p50_s"] > 0
+    assert all(r.latency_s > 0 for r in reqs)
+    assert sum(st["rows_dispatched"]) == 8
+    fe.reset_stats()
+    assert fe.stats()["requests_done"] == 0
+    assert fe.stats()["latency_p50_s"] is None
+
+
+# ---------------------------------------------------------------------------
+# Multi-device harness (forced 4-device CPU fan-out, subprocess)
+# ---------------------------------------------------------------------------
+
+_MULTIDEV_SCRIPT = r"""
+import jax, numpy as np, jax.numpy as jnp
+from repro import nn
+from repro.core.compiled_linear import compile_params
+from repro.models import resnet
+from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.pipeline import reference_logits
+
+assert len(jax.devices()) == 4, jax.devices()
+cfg = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+params = nn.unbox(compile_params(resnet.init(jax.random.PRNGKey(0), cfg),
+                                 mode="int8"))
+fe = ResNetFrontend(cfg, params, mode="int8", n_replicas=2, n_stages=2,
+                    microbatch=1)
+groups = [[str(s.device) for s in eng.pipe.stages] for eng in fe.replicas]
+flat = [d for g in groups for d in g]
+assert len(set(flat)) == 4, groups            # disjoint device groups
+for eng in fe.replicas:                       # weights live on-group
+    for s in eng.pipe.stages:
+        for leaf in jax.tree.leaves(s.params):
+            assert list(leaf.devices())[0] == s.device, (s.index,
+                                                         leaf.devices())
+x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 3)))
+reqs = [FrontendRequest(rid=0, images=x[:1]),
+        FrontendRequest(rid=1, images=x[1:4])]
+fe.run(reqs)
+for r in reqs:
+    ref = reference_logits(params, cfg, jnp.asarray(r.images), 1)
+    np.testing.assert_array_equal(np.asarray(r.logits), np.asarray(ref))
+assert sorted(r.replica for r in reqs) == [0, 1]
+print("FLEET_MULTIDEV_OK", groups)
+"""
+
+
+def test_fleet_on_four_forced_devices():
+    """Real multi-device fleet: 2 replicas x 2 stages on 4 distinct CPU
+    devices, stage params committed to their own group's devices, outputs
+    bit-identical per request.  Subprocess because device count is fixed
+    at backend init."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4")
+    env["REPRO_PALLAS"] = "jnp"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")] +
+        env.get("PYTHONPATH", "").split(os.pathsep))
+    proc = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                          capture_output=True, text=True, timeout=300,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "FLEET_MULTIDEV_OK" in proc.stdout

@@ -75,6 +75,7 @@ def test_pipeline_bit_identical_jnp(monkeypatch, mode, n_stages):
     assert eng.stats()["ticks"] == 2 + n_stages - 1    # M + S - 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n_stages", STAGE_COUNTS)
 @pytest.mark.parametrize("mode", MODES)
 def test_pipeline_bit_identical_interpret(monkeypatch, mode, n_stages):

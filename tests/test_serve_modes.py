@@ -47,6 +47,7 @@ def _block_forward(params, x, k, stride):
     return h, a_q, b_q
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("k,stride", GEOMS)
 @pytest.mark.parametrize("mode", cl.SERVE_MODES)
 def test_block_lowerings_agree(monkeypatch, mode, k, stride):

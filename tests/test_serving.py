@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import nn
 from repro.launch.train import build_cfg
@@ -124,6 +125,72 @@ def test_prefill_cache_lru_eviction():
         engine.run([Request(rid=L, prompt=list(rng.randint(1, cfg.vocab, L)),
                             max_new_tokens=1)])
     assert list(engine._prefill_cache) == [16, 32]   # 8 evicted, LRU order
+
+
+def test_max_new_tokens_one_gets_exactly_one_token():
+    """Request lifecycle: prefill already yields the first token, so a
+    max_new_tokens=1 request must complete right after prefill — the old
+    step() unconditionally ran a decode on the freshly-admitted slot and
+    returned 2 tokens."""
+    cfg = build_cfg("smollm_360m", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, mode="dense", batch_slots=2,
+                           max_seq=32)
+    rng = np.random.RandomState(5)
+    reqs = [Request(rid=i, prompt=list(rng.randint(1, cfg.vocab, 6)),
+                    max_new_tokens=1) for i in range(3)]
+    engine.run(reqs)
+    assert all(r.done for r in reqs)
+    assert [len(r.tokens_out) for r in reqs] == [1, 1, 1]
+    # the freed slot admits the next queued request before any decode:
+    # 3 requests through 2 slots with zero decode steps required
+    assert all(s is None for s in engine.active)
+
+
+def test_prefill_eos_completes_without_decode():
+    """An EOS produced BY PREFILL must finish the request — the old path
+    never checked it and decoded past the EOS."""
+    cfg = build_cfg("smollm_360m", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = list(np.random.RandomState(6).randint(1, cfg.vocab, 7))
+    probe = Request(rid=0, prompt=list(prompt), max_new_tokens=4)
+    ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                  max_seq=32).run([probe])
+    first = probe.tokens_out[0]                # what prefill will emit
+    engine = ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                           max_seq=32)
+    req = Request(rid=1, prompt=list(prompt), max_new_tokens=4,
+                  eos_id=first)
+    engine.run([req])
+    assert req.done and req.tokens_out == [first]
+
+
+def test_overlong_prompt_rejected_at_submit():
+    """A prompt longer than max_seq can't fit the (1, bucket) prefill
+    buffer (_bucket_len caps the bucket at max_seq) — submit() rejects it
+    with a clear error instead of a numpy shape error mid-prefill."""
+    cfg = build_cfg("smollm_360m", "tiny")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, mode="dense", batch_slots=1,
+                           max_seq=16)
+    long_prompt = list(np.random.RandomState(7).randint(1, cfg.vocab, 17))
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.submit(Request(rid=0, prompt=long_prompt))
+    assert not engine.queue                    # nothing half-admitted
+    # a decode budget that would overrun the cache is rejected too:
+    # decode token i lands at position L + i - 2, which
+    # dynamic_update_slice would silently CLAMP past max_seq
+    with pytest.raises(ValueError, match="decode budget"):
+        engine.submit(Request(rid=2, prompt=long_prompt[:16],
+                              max_new_tokens=4))
+    # boundaries that exactly fit still serve: L == max_seq with one
+    # (prefill-produced) token, and L + budget - 1 == max_seq
+    ok = Request(rid=1, prompt=long_prompt[:16], max_new_tokens=1)
+    engine.run([ok])
+    assert ok.done and len(ok.tokens_out) == 1
+    ok2 = Request(rid=3, prompt=long_prompt[:13], max_new_tokens=4)
+    engine.run([ok2])
+    assert ok2.done and len(ok2.tokens_out) == 4
 
 
 def test_compiled_modes_storage_shrinks():
