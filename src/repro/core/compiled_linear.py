@@ -52,12 +52,22 @@ from repro.kernels.bitmap import expand_bitmap_tile
 SERVE_MODES = ("dense", "int8", "cfmm", "sparse_cfmm", "bitserial")
 
 
-def act_quant(x: jax.Array):
-    """Dynamic per-tensor INT8 activation quantization (the Collector
-    saturates/rounds activations to 8 bits, paper SS II-D.4)."""
-    amax = jnp.max(jnp.abs(x))
+def act_quant(x: jax.Array, *, per_row: bool = False):
+    """Dynamic INT8 activation quantization (the Collector saturates/
+    rounds activations to 8 bits, paper SS II-D.4).
+
+    ``per_row=False``: one tensor-wide scalar scale (the per-microbatch
+    quantization domain).  ``per_row=True``: one scale per leading-axis
+    row — scale shape ``(N,)`` for ``(N, ...)`` input — the per-image
+    domain the compiled ResNet path serves under, so a row's int8 codes
+    never depend on its batch neighbours and microbatches may pack rows
+    from different requests (DESIGN.md §9).
+    """
+    axes = tuple(range(1, x.ndim)) if per_row else None
+    amax = jnp.max(jnp.abs(x), axis=axes)
     scale = (jnp.maximum(amax, 1e-12) / INT8_ACT_MAX).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+    s_b = scale.reshape((-1,) + (1,) * (x.ndim - 1)) if per_row else scale
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s_b),
                  -INT8_ACT_MAX, INT8_ACT_MAX).astype(jnp.int8)
     return q, scale
 
@@ -201,8 +211,15 @@ def _int8_dot(x_q: jax.Array, w_int8: jax.Array) -> jax.Array:
         preferred_element_type=jnp.int32)
 
 
-def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
-    """y = x @ W for any compiled or dense weight leaf.  Preserves x.dtype."""
+def apply_linear(w, x: jax.Array, qat: bool = False,
+                 per_row: bool = False) -> jax.Array:
+    """y = x @ W for any compiled or dense weight leaf.  Preserves x.dtype.
+
+    ``per_row=True`` quantizes each flattened input row under its own
+    INT8 domain (scale per row of the (M, K) matmul input) instead of one
+    tensor-wide scale — the compiled ResNet head uses this so a request's
+    logits never depend on which rows share its microbatch (DESIGN.md §9).
+    """
     if isinstance(w, nn.Param):
         w = w.value
     if not isinstance(w, dict):                    # dense (array / tracer)
@@ -216,7 +233,7 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
     # K-padded) — silently wrong under a plain matmul; use apply_conv
     assert "geom" not in w, "compiled conv leaf: use apply_conv"
     x2, lead = _flatten_batch(x)
-    x_q, s_x = act_quant(x2)
+    x_q, s_x = act_quant(x2, per_row=per_row)
     if "bitmap" in w:                              # sparse_cfmm
         from repro.kernels import ops
         acc = ops.sparse_cfmm_matmul(x_q, w["bitmap"], w["values"])
@@ -227,7 +244,8 @@ def apply_linear(w, x: jax.Array, qat: bool = False) -> jax.Array:
         acc = ops.cfmm_matmul(x_q, w["codes"])
     else:                                          # int8
         acc = _int8_dot(x_q, w["values"])
-    y = acc.astype(jnp.float32) * (s_x * w["scale"].reshape(1, -1))
+    s_row = s_x.reshape(-1, 1) if per_row else s_x
+    y = acc.astype(jnp.float32) * (s_row * w["scale"].reshape(1, -1))
     return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
 
 

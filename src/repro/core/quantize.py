@@ -63,13 +63,25 @@ def quantize_int7(w: jax.Array, axis: int = -1) -> QTensor:
     return QTensor(q, scale.astype(jnp.float32), axis)
 
 
-def quantize_act_int8(x: jax.Array, scale: Optional[jax.Array] = None) -> QTensor:
-    """INT8 activation quantization (per-tensor; dynamic if no scale given)."""
+def quantize_act_int8(x: jax.Array, scale: Optional[jax.Array] = None,
+                      per_row: bool = False) -> QTensor:
+    """INT8 activation quantization (dynamic if no scale given).
+
+    ``per_row=False`` (default): one tensor-wide scale — the historical
+    per-microbatch quantization domain.  ``per_row=True``: one scale per
+    leading-axis row (per image for NHWC activations), reduced over every
+    other axis with keepdims so ``scale`` broadcasts against ``values`` —
+    the quantization domain that lets serving pack rows from *different*
+    requests into one microbatch without any row's codes depending on its
+    batch neighbours (DESIGN.md §9).
+    """
     if scale is None:
-        amax = jnp.max(jnp.abs(x))
+        axes = tuple(range(1, x.ndim)) if per_row else None
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=per_row)
         scale = jnp.maximum(amax, 1e-12) / INT8_ACT_MAX
     q = jnp.clip(jnp.round(x / scale), -INT8_ACT_MAX, INT8_ACT_MAX).astype(jnp.int8)
-    return QTensor(q, jnp.asarray(scale, jnp.float32), -1)
+    return QTensor(q, jnp.asarray(scale, jnp.float32),
+                   0 if per_row else -1)
 
 
 @jax.custom_vjp

@@ -128,7 +128,10 @@ def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
                bottom-padded with zero rows to the strip plan's x_rows
     w_sp:      (k*k*C, n_out) int8, spatial-major tap layout (the
                compile-time storage layout — no call-time permute)
-    eff_scale: (1, n_out) f32 = s_x * w_scale * bn_scale (whole dequant+BN)
+    eff_scale: (N, n_out) f32 = s_x[row] * w_scale * bn_scale (whole
+               dequant+BN), one row per image: per-row quantization
+               domains index it on the grid's image axis (a per-tensor
+               scalar domain broadcasts the same row N times)
     eff_bias:  (1, n_out) f32
     shortcut:  optional (N, n_strips*ms_pad, n_out) f32, strip-blocked
                (each strip's strip_h*w_out rows padded to ms_pad)
@@ -140,6 +143,7 @@ def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
     N, Hp, Wp, C = x_pad.shape
     KK, n_out = w_sp.shape
     assert KK == k * k * C and n_out % bn == 0, ((KK, k, C), (n_out, bn))
+    assert eff_scale.shape == (N, n_out), (eff_scale.shape, N, n_out)
     g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
                        strip_h=strip_h if strip_h is not None else h_out)
     assert Hp >= g.x_rows and Wp >= (w_out - 1) * stride + k, \
@@ -154,7 +158,8 @@ def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
                      lambda n, s, j: (n, s * g.row_step, 0, 0),
                      indexing_mode=pl.unblocked),
         pl.BlockSpec((KK, bn), lambda n, s, j: (0, j)),
-        pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
+        # eff_scale: one dequant row PER IMAGE (per-row quant domains)
+        pl.BlockSpec((1, bn), lambda n, s, j: (n, j)),
         pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
     ]
     args = [x_pad, w_sp, eff_scale, eff_bias]

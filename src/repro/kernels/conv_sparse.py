@@ -95,7 +95,9 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
     bitmap:    (K_pad/8, n_out) uint8, spatial-major taps, K_pad =
                k*k*C rounded up to a multiple of 8 (zero-masked tail)
     values:    (keep_k, n_out) int8 nonzero codes, ascending-row order
-    eff_scale: (1, n_out) f32 = s_x * w_scale * bn_scale; eff_bias ditto
+    eff_scale: (N, n_out) f32 = s_x[row] * w_scale * bn_scale, one row
+               per image (per-row quantization domains; a per-tensor
+               domain broadcasts one row); eff_bias (1, n_out) f32
     shortcut:  optional (N, n_strips*ms_pad, n_out) f32, strip-blocked
     strip_h:   output rows per strip; None = one whole-image strip
     Returns (y, amax) exactly as conv2d_implicit_pallas.
@@ -105,6 +107,7 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
     keep_k = values.shape[0]
     assert Kb8 * 8 == -(-k * k * C // 8) * 8, (Kb8, k, C)
     assert n_out % bn == 0 and values.shape[1] == n_out, (n_out, bn)
+    assert eff_scale.shape == (N, n_out), (eff_scale.shape, N, n_out)
     g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
                        strip_h=strip_h if strip_h is not None else h_out)
     assert Hp >= g.x_rows and Wp >= (w_out - 1) * stride + k, \
@@ -121,7 +124,8 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
                      indexing_mode=pl.unblocked),
         pl.BlockSpec((Kb8, bn), lambda n, s, j: (0, j)),
         pl.BlockSpec((keep_k, bn), lambda n, s, j: (0, j)),
-        pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
+        # eff_scale: one dequant row PER IMAGE (per-row quant domains)
+        pl.BlockSpec((1, bn), lambda n, s, j: (n, j)),
         pl.BlockSpec((1, bn), lambda n, s, j: (0, j)),
     ]
     args = [x_pad, bitmap, values, eff_scale, eff_bias]

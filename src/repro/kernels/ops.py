@@ -182,7 +182,13 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
            w_layout: str = "channel", strip_h: int | None = None):
     """Fused row-strip-tiled implicit-GEMM int8 SAME conv + Collector.
 
-    x_q:     (N, H, W, c_in) int8 activations, x_scale their scalar scale
+    x_q:     (N, H, W, c_in) int8 activations; x_scale their scale —
+             a scalar (per-tensor quantization domain) or an ``(N,)``
+             per-row vector (one domain per image, DESIGN.md §9).  The
+             domain shape propagates: with a per-row x_scale, quant_out
+             emits a per-row y_scale, so a chain of convs stays per-row
+             end to end and a row's results never depend on its batch
+             neighbours
     codes:   (c_in*k*k, c_out) int8 constant weight codes — in im2col
              patch (channel-major) order by default, or the compiled
              spatial-major tap order with ``w_layout="spatial"`` (what
@@ -219,25 +225,32 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
         n_out = codes.shape[1]
         assert codes.shape[0] == C * k * k, (codes.shape, C, k)
     one = jnp.ones((n_out,), jnp.float32)
-    eff_scale = (jnp.asarray(x_scale, jnp.float32)
-                 * w_scale.reshape(-1).astype(jnp.float32)
+    x_s = jnp.asarray(x_scale, jnp.float32)
+    per_row = x_s.ndim >= 1          # (N,) per-row domains vs scalar
+    col_scale = (w_scale.reshape(-1).astype(jnp.float32)
                  * (one if gamma is None else gamma.astype(jnp.float32)))
+    # (R, n_out), R = N for per-row domains, 1 for the per-tensor scalar
+    eff_scale = x_s.reshape(-1, 1) * col_scale.reshape(1, -1)
     eff_bias = (jnp.zeros((n_out,), jnp.float32) if beta is None
                 else beta.astype(jnp.float32))
     if mode == "jnp":
+        # (R, 1, 1, n_out) broadcasts against NHWC accumulators in the
+        # oracles' shared _collector, per-row and per-tensor alike
+        eff4 = eff_scale.reshape(eff_scale.shape[0], 1, 1, n_out)
         if strip_h is not None:
             y = ref.conv2d_collector_strips_ref(
-                x_q, codes, k, stride, strip_h, eff_scale, eff_bias,
+                x_q, codes, k, stride, strip_h, eff4, eff_bias,
                 shortcut, relu, layout=w_layout)
         elif packed:
             y = ref.conv2d_sparse_collector_ref(
-                x_q, bitmap, values, k, stride, eff_scale, eff_bias,
+                x_q, bitmap, values, k, stride, eff4, eff_bias,
                 shortcut, relu)
         else:
-            y = ref.conv2d_collector_ref(x_q, codes, k, stride, eff_scale,
+            y = ref.conv2d_collector_ref(x_q, codes, k, stride, eff4,
                                          eff_bias, shortcut, relu,
                                          layout=w_layout)
-        amax_of = lambda: jnp.max(jnp.abs(y))
+        amax_of = (lambda: jnp.max(jnp.abs(y), axis=(1, 2, 3))) if per_row \
+            else (lambda: jnp.max(jnp.abs(y)))
     else:
         xp, h_out, w_out = ref.pad_same_nhwc(x_q, k, stride)
         m_out = h_out * w_out
@@ -248,7 +261,7 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
                 values = jnp.pad(values, ((0, 0), (0, n_pad - n_out)))
             else:
                 codes = jnp.pad(codes, ((0, 0), (0, n_pad - n_out)))
-            eff_scale = jnp.pad(eff_scale, (0, n_pad - n_out))
+            eff_scale = jnp.pad(eff_scale, ((0, 0), (0, n_pad - n_out)))
             eff_bias = jnp.pad(eff_bias, (0, n_pad - n_out))
         if packed:                 # per-cell weight slab for the planner:
             weight_bytes = (bitmap.shape[0] + values.shape[0]) * bn
@@ -272,29 +285,37 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
         kw = dict(k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
                   strip_h=plan.strip_h, relu=relu,
                   interpret=(mode == "interpret"))
+        # the kernels index eff_scale per image (grid axis n) so per-row
+        # domains ride the same launch; a per-tensor scalar broadcasts
+        eff_rows = jnp.broadcast_to(eff_scale, (N, n_pad))
         if packed:
             from repro.kernels.conv_sparse import conv2d_sparse_pallas
             y_flat, _amax = conv2d_sparse_pallas(
-                xp, bitmap, values, eff_scale.reshape(1, n_pad),
+                xp, bitmap, values, eff_rows,
                 eff_bias.reshape(1, n_pad), sc, **kw)
         else:
             from repro.kernels.conv_implicit import conv2d_implicit_pallas
             if w_layout == "channel":  # pre-compile codes pay the permute
                 codes = ref.to_spatial_major(codes, k, C)
             y_flat, _amax = conv2d_implicit_pallas(
-                xp, codes, eff_scale.reshape(1, n_pad),
+                xp, codes, eff_rows,
                 eff_bias.reshape(1, n_pad), sc, **kw)
         y = y_flat.reshape(N, plan.n_strips, plan.ms_pad, n_pad)[
             :, :, :plan.ms, :n_out]
         y = y.reshape(N, plan.n_strips * plan.ms, n_out)[:, :m_out]
         y = y.reshape(N, h_out, w_out, n_out)
-        amax_of = lambda: jnp.max(_amax)   # reduced on-chip in the epilogue
+        # reduced on-chip in the epilogue: (N, n_strips, n_j) -> whole-
+        # tensor max, or max over strips/tiles only (keep N) per-row
+        amax_of = (lambda: jnp.max(_amax, axis=(1, 2))) if per_row \
+            else (lambda: jnp.max(_amax))
     if not quant_out:
         return y
     # quantization-domain pass: activations go straight back to int8 so
-    # the next conv consumes codes without an f32 HBM round-trip
+    # the next conv consumes codes without an f32 HBM round-trip; under
+    # per-row domains s_y is (N,) — one independent scale per image
     s_y = (jnp.maximum(amax_of(), 1e-12) / 127.0).astype(jnp.float32)
-    y_q = jnp.clip(jnp.round(y / s_y), -127, 127).astype(jnp.int8)
+    s_b = s_y.reshape(-1, 1, 1, 1) if per_row else s_y
+    y_q = jnp.clip(jnp.round(y / s_b), -127, 127).astype(jnp.int8)
     return y_q, s_y
 
 

@@ -210,8 +210,10 @@ def conv2d_collector_ref(x_q: jax.Array, codes: jax.Array, k: int,
                          layout: str = "channel") -> jax.Array:
     """Fused conv + Collector oracle: dequant/BN scale, bias, shortcut, ReLU.
 
-    eff_scale = s_x * w_scale * bn_scale and eff_bias = bias, both (c_out,)
-    broadcastable — the whole Non-Kernel epilogue as two vectors.
+    eff_scale = s_x * w_scale * bn_scale and eff_bias = bias, both
+    broadcastable against the NHWC accumulator — ``(c_out,)`` for a
+    per-tensor quantization domain, ``(N, 1, 1, c_out)`` for per-row
+    domains (one independent dequant row per image, DESIGN.md §9).
     """
     acc = conv2d_int8_ref(x_q, codes, k, stride, layout)
     return _collector(acc, eff_scale, eff_bias, shortcut, relu)

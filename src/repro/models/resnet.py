@@ -194,7 +194,10 @@ class PipelineUnit:
     param subtree (``params`` here), so a pipeline stage holds exactly its
     units' constant weights and nothing else — the paper's persistent
     per-chip network.  Every edge between units is the quantization-domain
-    pair ``(int8 activations, f32 scale)`` — the 8-bit inter-chip link —
+    pair ``(int8 activations, f32 scale[row])`` — the 8-bit inter-chip
+    link, with one independent scale PER IMAGE (per-row domains,
+    DESIGN.md §9) so serving may pack rows from different requests into
+    one microbatch without any row's bits depending on its neighbours —
     except the f32 image into the stem and the f32 logits out of the head.
     ``block_id`` indexes ``conv_blocks_for``'s block list (stem = 0) so
     ``partition.StagePlan``s map 1:1 onto units; the head rides the last
@@ -207,28 +210,36 @@ class PipelineUnit:
     fn: object
 
 
+def _row_scale(s):
+    """Broadcast a per-row ``(N,)`` scale (or a scalar) over NHWC values."""
+    return jnp.asarray(s).reshape((-1,) + (1,) * 3)
+
+
 def _stem_unit(p, x):
-    x_q, s = act_quant(x)
+    x_q, s = act_quant(x, per_row=True)
     h = _conv_q(p, x_q, s, relu=True)
     h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
-    return act_quant(h)
+    return act_quant(h, per_row=True)
 
 
 def _block_unit(p, carry):
     h_q, s_h = carry
     sc = (_conv_q(p["sc"], h_q, s_h, relu=False) if "sc" in p
-          else h_q.astype(jnp.float32) * s_h)
+          else h_q.astype(jnp.float32) * _row_scale(s_h))
     a_q, s_a = _conv_q(p["a"], h_q, s_h, quant_out=True)
     b_q, s_b = _conv_q(p["b"], a_q, s_a, quant_out=True)
     h = _conv_q(p["c"], b_q, s_b, shortcut=sc, relu=True)
-    return act_quant(h)
+    return act_quant(h, per_row=True)
 
 
 def _head_unit(p, carry):
     h_q, s_h = carry
-    pooled = jnp.mean(h_q.astype(jnp.float32) * s_h, axis=(1, 2))
-    return apply_linear(p["w"], pooled)
+    pooled = jnp.mean(h_q.astype(jnp.float32) * _row_scale(s_h),
+                      axis=(1, 2))
+    # per_row: the head's input quantization must not couple rows either,
+    # or a request's logits would depend on its microbatch neighbours
+    return apply_linear(p["w"], pooled, per_row=True)
 
 
 def compiled_units(params, cfg: ResNetConfig) -> list:
@@ -250,8 +261,12 @@ def _apply_compiled(params, x, cfg: ResNetConfig):
     """Compiled serving path: fused implicit-GEMM convs + the quantization-
     domain pass — one ``act_quant`` per block, int8 activations between the
     a/b/c convs AND on every block edge (producer-side quantization: each
-    unit emits ``(int8, scale)``, so slicing the unit list into pipeline
-    stages moves only 8-bit feature maps and cannot change the math).
+    unit emits ``(int8, scale[row])``, so slicing the unit list into
+    pipeline stages moves only 8-bit feature maps and cannot change the
+    math).  Quantization domains are PER ROW (per image): every scale on
+    every edge is an ``(N,)`` vector reduced over H·W·C only, so each
+    image's entire forward is independent of its batch neighbours and any
+    packing of rows into microbatches is bit-identical (DESIGN.md §9).
     The identity shortcut consumes the quantized block input — the FPGA's
     shortcut reads the same 8-bit inter-layer map (paper SS II-D.4).
     """

@@ -19,17 +19,29 @@ the kernels do, so it gets its own component.
   compile once, ``device_put`` per stage (spy-tested in
   tests/test_frontend.py).
 * **Admission + routing** — requests wait in the front-door queue until
-  the least-loaded replica (by ``PipelineEngine.pending_rows`` — row-
-  granular accounting of unsubmitted queue rows plus rows in flight
-  through the stages) has room under ``admit_rows``; a request is
-  dispatched *whole* to one replica.  (``ConvPipeline.in_flight``
-  surfaces each chain's microbatch occupancy in ``stats()``.)
-* **Quantization-domain safety** — microbatches are packed per request
-  inside one replica (``PipelineEngine._next_microbatch`` never crosses
-  a request), so a request's logits are bit-identical to
+  the least-loaded replica (by ``PipelineEngine.pending_rows`` — O(1)
+  row-granular accounting of unsubmitted queue rows plus rows in flight
+  through the stages) has room under ``admit_rows``.  Dispatch is ROW
+  granular by default (``continuous=True``): the head request hands off
+  only as many rows as the least-loaded replica has room for, so two
+  small requests can land in one replica back-to-back and share a
+  microbatch there (continuous cross-request batching), and a large
+  request no longer head-of-line-blocks the door waiting for one replica
+  to drain whole.  ``continuous=False`` restores whole-request dispatch
+  (the measured baseline in benchmarks/frontend_bench.py).
+* **Quantization-domain safety** — quantization domains are PER ROW
+  (DESIGN.md §9): one image's logits depend only on its own pixels, so
+  any packing — across requests inside a replica's microbatch, or one
+  request's rows split across replicas — is bit-identical to
   ``serving.pipeline.reference_logits`` no matter the replica count,
-  arrival order, or interleaving: replicas never share a quantization
-  domain, and neither do queue neighbours (DESIGN.md §8).
+  arrival order, or interleaving.
+* **Front-door validation** — ``submit`` rejects malformed requests with
+  a clear ``ValueError`` (mirroring ``ServingEngine.submit``'s
+  hardening) instead of shape-erroring deep inside a packed microbatch:
+  images must be float-castable, rank-4 ``(n, H, W, 3)`` with
+  ``H == W == cfg.in_hw``, and finite.  The shape check is load-bearing:
+  cross-request packing concatenates rows from different requests, so
+  one odd-shaped request would poison its microbatch neighbours' step.
 * **Accounting** — queue depth (current + max), per-replica bubble and
   rows dispatched, and wall-clock request latency (submit -> done)
   reported as p50/p95.
@@ -54,7 +66,8 @@ from repro.serving.pipeline import PipelineEngine, PipelineRequest
 @dataclasses.dataclass
 class FrontendRequest(PipelineRequest):
     """A ``PipelineRequest`` plus the front-end's lifecycle accounting."""
-    replica: int | None = None          # assigned at dispatch
+    replica: int | None = None          # first replica assigned at dispatch
+    rows_routed: int = 0                # dispatch cursor (continuous mode)
     t_submit: float | None = None
     t_done: float | None = None
 
@@ -76,10 +89,12 @@ class ResNetFrontend:
                  mode: str = "int8", sparsity: float = 0.8,
                  n_replicas: int = 2, n_stages: int = 1,
                  stage_blocks=None, plan=None, microbatch: int = 2,
-                 devices=None, admit_rows: int | None = None):
+                 devices=None, admit_rows: int | None = None,
+                 continuous: bool = True):
         assert n_replicas >= 1, n_replicas
         self.cfg = cfg
         self.microbatch = microbatch
+        self.continuous = continuous
         # compile ONCE; every replica shares this host-side tree and only
         # device_puts its own stages' subtrees onto its device group
         self.params = ensure_compiled(params, mode, sparsity)
@@ -89,7 +104,8 @@ class ResNetFrontend:
             PipelineEngine(cfg, self.params, mode=mode, sparsity=sparsity,
                            n_stages=n_stages, stage_blocks=stage_blocks,
                            plan=plan, microbatch=microbatch,
-                           devices=groups[r], replica=r)
+                           devices=groups[r], replica=r,
+                           pack_requests=continuous)
             for r in range(n_replicas)]
         # front door: a replica chain absorbs n_stages in-flight
         # microbatches; double that before the queue holds requests back
@@ -107,32 +123,88 @@ class ResNetFrontend:
         self.requests_done = 0
 
     # -- request management --------------------------------------------
+    def _validate(self, req) -> np.ndarray:
+        """Front-door request hardening: reject malformed image payloads
+        with a clear ValueError instead of shape-erroring deep inside a
+        packed microbatch (where the failure would also take DOWN the
+        innocent requests sharing that microbatch)."""
+        try:
+            images = np.asarray(req.images, dtype=np.float32)
+        except (TypeError, ValueError) as e:
+            raise ValueError(
+                f"request {req.rid}: images must be castable to float32 "
+                f"(got {type(req.images).__name__}: {e})") from None
+        hw = self.cfg.in_hw
+        if images.ndim != 4 or images.shape[1:] != (hw, hw, 3):
+            raise ValueError(
+                f"request {req.rid}: images must have shape "
+                f"(n, {hw}, {hw}, 3) — rows from different requests are "
+                f"packed into one microbatch, so every request must match "
+                f"the model's input geometry exactly; got "
+                f"{images.shape}")
+        if images.size and not np.isfinite(images).all():
+            raise ValueError(
+                f"request {req.rid}: images contain NaN/Inf pixels — a "
+                f"non-finite row would corrupt its per-row quantization "
+                f"scale and produce garbage logits; sanitize upstream")
+        return images
+
     def submit(self, req):
-        """Admit a request into the front-door queue (routing happens at
-        ``step`` time, when replica load is current)."""
+        """Validate and admit a request into the front-door queue
+        (routing happens at ``step`` time, when replica load is
+        current).  Raises ValueError on malformed images."""
+        req.images = self._validate(req)
         req.logits = None
         req.done = False
         req.replica = None
+        req.rows_submitted = req.rows_done = req.rows_routed = 0
         req.t_submit = time.perf_counter()
         req.t_done = None
+        if len(req.images) == 0:
+            # zero-row request: complete at the front door — it owns no
+            # microbatch slot, so don't make a replica tick for it
+            req.logits = np.zeros((0, self.cfg.num_classes), np.float32)
+            req.done = True
+            self._inflight.append(req)      # _collect stamps t_done
+            return
         self.queue.append(req)
         self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
 
     def _dispatch(self):
-        """Route head-of-queue requests to the least-loaded replica while
-        it has room under ``admit_rows`` — FIFO order, whole requests
-        only (per-request microbatch packing lives in the engine)."""
+        """Route head-of-queue rows to the least-loaded replica while it
+        has room under ``admit_rows`` — FIFO order.  Continuous mode
+        hands off ROWS (the replica packs them into shared microbatches);
+        whole-request mode keeps the request intact.  Each hand-off
+        reads ``pending_rows`` — O(1), incrementally maintained by the
+        engine — so dispatching R requests costs O(R · n_replicas), not
+        the O(R²) a per-hand-off queue scan used to cost under load."""
         while self.queue:
             loads = [eng.pending_rows for eng in self.replicas]
             r = int(np.argmin(loads))
-            if loads[r] >= self.admit_rows:
+            room = self.admit_rows - loads[r]
+            if room <= 0:
                 return                      # backpressure: hold the door
-            req = self.queue.popleft()
-            req.replica = r
-            self.replicas[r].submit(req)
-            self.rows_dispatched[r] += len(req.images)
-            self.requests_dispatched[r] += 1
-            self._inflight.append(req)
+            req = self.queue[0]
+            if self.continuous:
+                take = min(room, len(req.images) - req.rows_routed)
+                if req.rows_routed == 0:    # first rows of this request
+                    req.replica = r
+                    self.requests_dispatched[r] += 1
+                    self._inflight.append(req)
+                self.replicas[r].submit_rows(
+                    req, req.rows_routed, req.rows_routed + take)
+                req.rows_routed += take
+                self.rows_dispatched[r] += take
+                if req.rows_routed >= len(req.images):
+                    self.queue.popleft()
+            else:
+                self.queue.popleft()
+                req.replica = r
+                self.replicas[r].submit(req)
+                req.rows_routed = len(req.images)
+                self.rows_dispatched[r] += len(req.images)
+                self.requests_dispatched[r] += 1
+                self._inflight.append(req)
 
     def _collect(self):
         done, still = [], []
@@ -174,15 +246,16 @@ class ResNetFrontend:
     def reset_stats(self):
         """Zero the lifecycle counters (latency samples, queue-depth
         high-water mark, dispatch tallies, and each replica's schedule
-        tick/bubble basis) without touching the replicas' compiled state
-        — benches call this between measured waves, while idle."""
+        tick/bubble/occupancy basis) without touching the replicas'
+        compiled state — benches call this between measured waves, while
+        idle."""
         self._latencies.clear()
         self.max_queue_depth = len(self.queue)
         self.requests_done = 0
         self.rows_dispatched = [0] * len(self.replicas)
         self.requests_dispatched = [0] * len(self.replicas)
         for eng in self.replicas:
-            eng.pipe.reset_counters()
+            eng.reset_counters()
 
     def stats(self) -> dict:
         reps = [eng.stats() for eng in self.replicas]
@@ -190,6 +263,7 @@ class ResNetFrontend:
             "n_replicas": len(self.replicas),
             "microbatch": self.microbatch,
             "admit_rows": self.admit_rows,
+            "continuous": self.continuous,
             "queue_depth": len(self.queue),
             "max_queue_depth": self.max_queue_depth,
             "requests_done": self.requests_done,
@@ -198,5 +272,7 @@ class ResNetFrontend:
             "latency_p50_s": _percentile(self._latencies, 50),
             "latency_p95_s": _percentile(self._latencies, 95),
             "replica_bubble": [s["bubble_fraction"] for s in reps],
+            "microbatch_occupancy": [s["microbatch_occupancy"]
+                                     for s in reps],
             "replicas": reps,
         }

@@ -2,10 +2,10 @@
 microbatched requests, the executable Fig 7.
 
 Mirrors ``serving/engine.py``'s submit/step/run surface for the CNN path:
-requests carry image batches, the engine splits them into fixed-size
-microbatches, and a ``distributed.conv_pipeline.ConvPipeline`` rotates
-the microbatches through per-device stages whose (disjoint) constant
-weights were placed at construction time.
+requests carry image batches, the engine splits them into rows, and a
+``distributed.conv_pipeline.ConvPipeline`` rotates microbatches through
+per-device stages whose (disjoint) constant weights were placed at
+construction time.
 
 Stage planning accepts, in precedence order:
 
@@ -14,14 +14,17 @@ Stage planning accepts, in precedence order:
 * ``stage_blocks``— an explicit stage map: tuple of block-id tuples;
 * ``n_stages``    — MAC-balanced contiguous split (partition.plan_stages).
 
-Quantization domains are per-microbatch (the engine's unit of work):
-``n_stages=1`` with one microbatch is *bit-identical* to
-``resnet.apply`` on the same images, and any stage count is bit-identical
-to the per-microbatch reference (``reference_logits``) because stage
-boundaries only relocate the int8 edges the single-device compiled
-forward already produces (models/resnet.compiled_units).  Microbatches
-never span requests — one request's logits must not depend on whoever
-shares the queue (per-tensor scales are microbatch-wide).
+Quantization domains are PER ROW (per image, DESIGN.md §9): every edge of
+the compiled forward carries ``(int8, scale[row])``, so one row's logits
+depend only on its own pixels — never on whoever shares its microbatch.
+That is what makes **continuous cross-request batching** sound: the
+engine packs rows from *different* requests into one microbatch
+(``_next_microbatch``), keeping the pipe full under heavy small-request
+traffic, and every request is still bit-identical to the per-row
+single-device reference (``reference_logits``) for ANY packing,
+``pack_requests`` setting, stage count, or arrival order.  Each injected
+microbatch carries per-row segment tags ``(request, start_row, n_rows)``
+so completed logits scatter back to their requests.
 """
 from __future__ import annotations
 
@@ -47,6 +50,26 @@ class PipelineRequest:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _RowSpan:
+    """A contiguous row range of one request waiting in the engine queue.
+
+    ``cursor`` advances as rows enter microbatches; the span is spent when
+    it reaches ``stop``.  Whole-request submission makes one span; the
+    row-granular front door (serving/frontend.py) may enqueue several
+    spans of one request — possibly on different replicas — and per-row
+    quantization domains keep every split bit-identical.
+    """
+
+    req: PipelineRequest
+    cursor: int
+    stop: int
+
+    @property
+    def remaining(self) -> int:
+        return self.stop - self.cursor
+
+
 def _make_stage_fn(unit_fns):
     def stage_fn(stage_params, carry):
         for fn, p in zip(unit_fns, stage_params):
@@ -56,13 +79,19 @@ def _make_stage_fn(unit_fns):
 
 
 def reference_logits(params, cfg, x, microbatch: int):
-    """The single-device compiled path at the engine's microbatch
-    granularity — the bit-identity reference for every stage count.
+    """The single-device compiled path at microbatch granularity — the
+    bit-identity reference for every stage count AND every packing of
+    rows into microbatches: quantization domains are per-row, so the
+    microbatch split here is a memory bound, not a numerics choice.
 
     Jitted, like the engine's stage programs: slicing the unit list into
     jitted stages is bit-exact vs the whole-model jit (no float op's
     fusion pair spans an int8 edge), whereas op-by-op eager execution
     differs by FMA-contraction ulps from ANY jitted lowering."""
+    if x.shape[0] == 0:
+        # zero-row input: jnp.concatenate over no microbatches would
+        # raise — return the empty logits directly
+        return jnp.zeros((0, cfg.num_classes), jnp.float32)
     fn = jax.jit(lambda p, mb: resnet.apply(p, mb, cfg))
     mbs = [x[i:i + microbatch] for i in range(0, x.shape[0], microbatch)]
     return jnp.concatenate([fn(params, mb) for mb in mbs])
@@ -74,10 +103,16 @@ class PipelineEngine:
     def __init__(self, cfg: resnet.ResNetConfig, params, *,
                  mode: str = "int8", sparsity: float = 0.8,
                  n_stages: int | None = None, stage_blocks=None, plan=None,
-                 microbatch: int = 2, devices=None, replica: int = 0):
+                 microbatch: int = 2, devices=None, replica: int = 0,
+                 pack_requests: bool = True):
         assert mode != "dense", "the pipeline serves the compiled network"
         self.cfg = cfg
         self.microbatch = microbatch
+        # continuous cross-request batching: fill microbatches across
+        # request boundaries (sound under per-row quantization domains).
+        # False restores whole-request microbatch packing — kept as the
+        # measurable baseline for benchmarks/frontend_bench.py.
+        self.pack_requests = pack_requests
         # params: the boxed training tree (compiled here, like
         # ServingEngine) or an already-compiled unboxed tree
         self.params = ensure_compiled(params, mode, sparsity)
@@ -90,8 +125,15 @@ class PipelineEngine:
         self.pipe = ConvPipeline(
             self._build_stages(units, self.stage_block_ids, devices),
             replica=replica)
-        self.queue: list[PipelineRequest] = []
+        self.queue: list[_RowSpan] = []
+        # incremental row accounting (kept exactly in sync with the span
+        # queue; _scan_pending_rows is the O(queue) oracle tests assert
+        # against) — pending_rows is O(1) so the front door's routing
+        # loop stays linear in admitted requests
+        self._queued_rows = 0
         self._rows_in_flight = 0
+        self._mb_injected = 0
+        self._rows_injected = 0
 
     # -- stage planning -------------------------------------------------
     def _resolve_plan(self, plan, stage_blocks, n_stages, n_blocks,
@@ -137,37 +179,66 @@ class PipelineEngine:
 
     # -- request management --------------------------------------------
     def submit(self, req: PipelineRequest):
+        """Enqueue a whole request (resets its lifecycle)."""
         req.logits = None
         req.rows_submitted = req.rows_done = 0
         req.done = False
-        self.queue.append(req)
+        self.queue.append(_RowSpan(req, 0, len(req.images)))
+        self._queued_rows += len(req.images)
+
+    def submit_rows(self, req: PipelineRequest, start: int, stop: int):
+        """Enqueue one row span of a request WITHOUT touching its
+        lifecycle — the front door's row-granular dispatch path: a
+        request's rows may be spread over several spans (even on
+        different replicas) and per-row quantization domains keep every
+        split bit-identical.  The caller owns the lifecycle reset."""
+        assert 0 <= start <= stop <= len(req.images), (
+            start, stop, len(req.images))
+        self.queue.append(_RowSpan(req, start, stop))
+        self._queued_rows += stop - start
+
+    @staticmethod
+    def _complete_empty(req, num_classes):
+        req.logits = np.zeros((0, num_classes), np.float32)
+        req.done = True
 
     def _next_microbatch(self):
-        """Head-of-queue rows, at most ``microbatch`` of them, never
-        crossing a request boundary (per-microbatch quantization)."""
-        while self.queue:
-            req = self.queue[0]
-            if len(req.images) == 0:           # zero-row request: complete
-                req.logits = np.zeros((0, self.cfg.num_classes), np.float32)
-                req.done = True
+        """Pack up to ``microbatch`` head-of-queue rows into one
+        microbatch.  With ``pack_requests`` (the default) rows from
+        DIFFERENT requests share a microbatch — continuous batching,
+        sound because quantization domains are per-row; otherwise a
+        microbatch stops at the first span boundary (the whole-request
+        baseline).  Returns (segments, rows): segments are per-row
+        request tags ``(request, start_row, n_rows)`` in row order."""
+        segs, parts = [], []
+        need = self.microbatch
+        while self.queue and need > 0:
+            span = self.queue[0]
+            if span.remaining == 0:            # zero-row request: complete
+                if len(span.req.images) == 0:
+                    self._complete_empty(span.req, self.cfg.num_classes)
                 self.queue.pop(0)
                 continue
-            start = req.rows_submitted
-            if start >= len(req.images):
+            take = min(need, span.remaining)
+            segs.append((span.req, span.cursor, take))
+            parts.append(span.req.images[span.cursor:span.cursor + take])
+            span.cursor += take
+            span.req.rows_submitted += take
+            self._queued_rows -= take
+            need -= take
+            if span.remaining == 0:
                 self.queue.pop(0)
-                continue
-            stop = min(start + self.microbatch, len(req.images))
-            req.rows_submitted = stop
-            if stop >= len(req.images):
-                self.queue.pop(0)
-            return (req, start), jnp.asarray(req.images[start:stop],
-                                             jnp.float32)
-        return None, None
+            if not self.pack_requests:
+                break                          # never cross a span boundary
+        if not segs:
+            return None, None
+        rows = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        return segs, jnp.asarray(rows, jnp.float32)
 
     def step(self) -> bool:
-        """Inject one microbatch (if any is queued) and advance the
-        schedule one tick; completed microbatches land in their request's
-        logits.  Returns False once idle."""
+        """Inject one microbatch (if any rows are queued) and advance the
+        schedule one tick; completed rows scatter back to their segments'
+        requests.  Returns False once idle."""
         tag = mb = None
         if self.pipe.inlet_free:
             tag, mb = self._next_microbatch()
@@ -175,14 +246,20 @@ class PipelineEngine:
             return False
         if mb is not None:
             self._rows_in_flight += int(mb.shape[0])
-        for (req, start), out in self.pipe.tick(inject=mb, tag=tag):
+            self._mb_injected += 1
+            self._rows_injected += int(mb.shape[0])
+        for segs, out in self.pipe.tick(inject=mb, tag=tag):
             out = np.asarray(out)
-            if req.logits is None:
-                req.logits = np.zeros((len(req.images), out.shape[-1]),
-                                      out.dtype)
-            req.logits[start:start + out.shape[0]] = out
-            req.rows_done += out.shape[0]
-            req.done = req.rows_done >= len(req.images)
+            off = 0
+            for req, start, n in segs:
+                if req.logits is None:
+                    req.logits = np.zeros((len(req.images), out.shape[-1]),
+                                          out.dtype)
+                req.logits[start:start + n] = out[off:off + n]
+                req.rows_done += n
+                req.done = req.rows_done >= len(req.images)
+                off += n
+            assert off == out.shape[0], (off, out.shape)
             self._rows_in_flight -= out.shape[0]
         return True
 
@@ -199,9 +276,15 @@ class PipelineEngine:
         rows plus the exact rows still rotating through the stages
         (partial microbatches count their real size) — the load metric
         ``serving.frontend.ResNetFrontend``'s least-loaded router
-        compares across replicas."""
-        queued = sum(len(r.images) - r.rows_submitted for r in self.queue)
-        return queued + self._rows_in_flight
+        compares across replicas.  O(1): incrementally maintained (the
+        router reads it once per admitted row chunk, so a linear scan
+        here made dispatch O(requests²) under load — tests assert it
+        equals ``_scan_pending_rows``)."""
+        return self._queued_rows + self._rows_in_flight
+
+    def _scan_pending_rows(self) -> int:
+        """The linear-scan oracle for ``pending_rows`` (tests only)."""
+        return sum(sp.remaining for sp in self.queue) + self._rows_in_flight
 
     def run_batch(self, x) -> jnp.ndarray:
         """Convenience: one anonymous request, returns stacked logits."""
@@ -209,9 +292,24 @@ class PipelineEngine:
         self.run([req])
         return jnp.asarray(req.logits)
 
+    def reset_counters(self):
+        """Zero the schedule + occupancy counters (idle only — delegates
+        the busy check to ConvPipeline.reset_counters)."""
+        self.pipe.reset_counters()
+        self._mb_injected = 0
+        self._rows_injected = 0
+
     def stats(self) -> dict:
         out = self.pipe.stats()
         out["microbatch"] = self.microbatch
+        out["pack_requests"] = self.pack_requests
+        out["mb_injected"] = self._mb_injected
+        out["rows_injected"] = self._rows_injected
+        # continuous batching's gate metric: mean fraction of microbatch
+        # slots actually filled (1.0 = the pipe runs full)
+        out["microbatch_occupancy"] = (
+            self._rows_injected / (self._mb_injected * self.microbatch)
+            if self._mb_injected else None)
         out["stage_blocks"] = [list(ids) for ids in self.stage_block_ids]
         out["planned_link_bytes"] = [p.link_bytes for p in self.plan[:-1]]
         return out

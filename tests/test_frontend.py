@@ -257,6 +257,103 @@ def test_admit_rows_validated_and_partial_mb_load_exact(monkeypatch):
     assert eng.pending_rows == 0
 
 
+def test_submit_validation_rejects_malformed(monkeypatch):
+    """The front door rejects wrong-rank, wrong-geometry, non-castable,
+    and non-finite image payloads with a clear ValueError — mirroring
+    ServingEngine.submit's hardening — instead of shape-erroring deep
+    inside a packed microbatch (where the crash would also take down the
+    innocent requests sharing it).  Nothing malformed enters the queue."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=1,
+                        microbatch=MB)
+    hw = CFG.in_hw
+    bad = [
+        (np.zeros((2, hw, hw), np.float32), "shape"),          # rank 3
+        (np.zeros((2, hw, hw, 1), np.float32), "shape"),       # 1 channel
+        (np.zeros((2, hw + 1, hw + 1, 3), np.float32), "shape"),
+        (np.zeros((2, hw, hw, 3, 1), np.float32), "shape"),    # rank 5
+        (np.asarray([["nope"]], dtype=object), "castable"),
+        (np.full((1, hw, hw, 3), np.nan, np.float32), "NaN/Inf"),
+        (np.full((1, hw, hw, 3), np.inf, np.float32), "NaN/Inf"),
+    ]
+    for images, match in bad:
+        with pytest.raises(ValueError, match=match):
+            fe.submit(FrontendRequest(rid=99, images=images))
+    assert len(fe.queue) == 0 and not fe._inflight
+    # a list-of-lists payload that IS castable to the right shape passes
+    ok = FrontendRequest(rid=1, images=_images(1).tolist())
+    fe.run([ok])
+    assert ok.done and isinstance(ok.images, np.ndarray)
+    np.testing.assert_array_equal(ok.logits, _reference("int8", ok.images,
+                                                        MB))
+
+
+def test_two_small_requests_share_a_microbatch(monkeypatch):
+    """The continuous-batching demonstrator: two 1-row requests on one
+    replica ride in ONE shared microbatch (occupancy 1.0, one injection)
+    and each still matches its own single-request reference bit for bit.
+    The whole-request baseline (continuous=False) needs two half-empty
+    microbatches for the same traffic."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    reqs = [FrontendRequest(rid=i, images=_images(1, seed=i))
+            for i in range(2)]
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=1,
+                        n_stages=1, microbatch=MB)
+    fe.run(reqs)
+    _check_vs_reference(reqs, "int8")
+    st = fe.replicas[0].stats()
+    assert st["mb_injected"] == 1 and st["rows_injected"] == 2
+    assert st["microbatch_occupancy"] == 1.0
+    base = ResNetFrontend(CFG, _compiled("int8"), mode="int8",
+                          n_replicas=1, n_stages=1, microbatch=MB,
+                          continuous=False)
+    breqs = [FrontendRequest(rid=i, images=_images(1, seed=i))
+             for i in range(2)]
+    base.run(breqs)
+    _check_vs_reference(breqs, "int8")
+    stb = base.replicas[0].stats()
+    assert stb["mb_injected"] == 2
+    assert stb["microbatch_occupancy"] == 0.5
+
+
+def test_row_granular_dispatch_splits_across_replicas(monkeypatch):
+    """A request larger than one replica's admission room spills its
+    remaining rows to the other replica instead of head-of-line blocking
+    the queue — and the reassembled logits still match the reference."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,
+                        n_stages=1, microbatch=MB, admit_rows=2)
+    req = FrontendRequest(rid=0, images=_images(6))
+    fe.run([req])
+    _check_vs_reference([req], "int8")
+    assert req.replica == 0                    # first rows' replica
+    st = fe.stats()
+    assert sum(st["rows_dispatched"]) == 6
+    assert all(n > 0 for n in st["rows_dispatched"])   # genuinely split
+
+
+def test_dispatch_load_counters_match_scan(monkeypatch):
+    """The O(1) incremental ``pending_rows`` the router reads must equal
+    the linear-scan oracle on every replica at every step of a loaded
+    mixed-size workload (the scan is what the incremental counters
+    replaced to stop dispatch being O(requests²))."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,
+                        n_stages=2, microbatch=MB, admit_rows=3)
+    reqs = [FrontendRequest(rid=i, images=_images(1 + i % 4, seed=i))
+            for i in range(8)]
+    for r in reqs:
+        fe.submit(r)
+    while True:
+        busy = fe.step()
+        for eng in fe.replicas:
+            assert eng.pending_rows == eng._scan_pending_rows()
+        if not busy:
+            break
+    _check_vs_reference(reqs, "int8")
+    assert all(eng.pending_rows == 0 for eng in fe.replicas)
+
+
 def test_stats_latency_and_replica_accounting(monkeypatch):
     monkeypatch.setenv("REPRO_PALLAS", "jnp")
     fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=2,

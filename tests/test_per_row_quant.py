@@ -1,0 +1,194 @@
+"""Per-row quantization domains (DESIGN.md §9) — the invariant behind
+continuous cross-request batching.
+
+Property level: quantizing rows together with ``per_row=True`` is
+bit-identical to quantizing each row alone, at every layer of the stack
+(core.quantize, compiled_linear.act_quant/apply_linear, the fused conv
+Collector through both lowerings).  Model level, two tiers of contract:
+
+* the jnp oracle lowering is fully packing-invariant — ANY chunking of a
+  batch into microbatches produces bit-identical logits, every serve
+  mode;
+* the Pallas kernel lowerings are neighbour- and position-invariant at a
+  FIXED microbatch shape (a row's bits never depend on who shares its
+  microbatch or where it sits), but executables for different batch
+  shapes may differ by data-dependent FMA-contraction ulps — the same
+  caveat serving.pipeline.reference_logits documents for eager-vs-jit.
+
+That pair is exactly what lets serving pack rows from different requests
+into one fixed-size microbatch (serving/pipeline.py) and split one
+request across replicas (serving/frontend.py) without changing anyone's
+answer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.core import quantize as q
+from repro.kernels import ops
+from repro.models import resnet
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+CFG = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+MODES = [m for m in cl.SERVE_MODES if m != "dense"]
+
+
+# ---------------------------------------------------------------------------
+# core.quantize / compiled_linear: row independence as a property
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 24))
+def test_quantize_act_int8_per_row_is_rowwise(seed, n, d):
+    """``per_row=True`` == quantizing each row alone: codes AND scales.
+    Mixing a huge-magnitude row with a tiny one must not change the tiny
+    row's codes (the precise failure of per-tensor domains)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    x = x.at[0].mul(100.0)                 # domain-poisoning neighbour
+    qt = q.quantize_act_int8(x, per_row=True)
+    assert qt.scale.shape == (n,) + (1,) * (x.ndim - 1)
+    for i in range(n):
+        alone = q.quantize_act_int8(x[i:i + 1], per_row=True)
+        np.testing.assert_array_equal(np.asarray(qt.values[i:i + 1]),
+                                      np.asarray(alone.values))
+        np.testing.assert_array_equal(np.asarray(qt.scale[i:i + 1]),
+                                      np.asarray(alone.scale))
+    # legacy per-tensor domain unchanged: scalar scale, shared by all rows
+    legacy = q.quantize_act_int8(x)
+    assert legacy.scale.ndim == 0
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_act_quant_per_row_matches_slices(seed):
+    """compiled_linear.act_quant(per_row=True) returns (N,) scales and is
+    bit-identical to quantizing each image alone — NHWC rank included."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 4, 4, 8)) * \
+        jnp.asarray([0.01, 1.0, 50.0]).reshape(3, 1, 1, 1)
+    x_q, s = cl.act_quant(x, per_row=True)
+    assert s.shape == (3,) and s.dtype == jnp.float32
+    for i in range(3):
+        qi, si = cl.act_quant(x[i:i + 1], per_row=True)
+        np.testing.assert_array_equal(np.asarray(x_q[i:i + 1]),
+                                      np.asarray(qi))
+        np.testing.assert_array_equal(np.asarray(s[i:i + 1]),
+                                      np.asarray(si))
+    # per-tensor path untouched: scalar scale
+    _, s_t = cl.act_quant(x)
+    assert s_t.ndim == 0
+
+
+def test_apply_linear_per_row_rows_independent():
+    """The classifier head's per-row path: each row of the int8 matmul
+    output equals the row computed alone, so the head cannot couple
+    microbatch neighbours (the bug that POOLED per-tensor act_quant over
+    the batch used to introduce)."""
+    key = jax.random.PRNGKey(0)
+    w = cl._compile_leaf_2d(jax.random.normal(key, (16, 4)), "int8", 0.0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (5, 16)) * \
+        jnp.asarray([100.0, 1.0, 0.02, 3.0, 7.0]).reshape(5, 1)
+    y = cl.apply_linear(w, x, per_row=True)
+    for i in range(5):
+        yi = cl.apply_linear(w, x[i:i + 1], per_row=True)
+        np.testing.assert_array_equal(np.asarray(y[i:i + 1]),
+                                      np.asarray(yi))
+
+
+# ---------------------------------------------------------------------------
+# Fused conv Collector: per-row domains through both lowerings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lowering", ["jnp", "interpret"])
+def test_conv2d_per_row_matches_row_slices(monkeypatch, lowering):
+    """conv2d with an (N,) x_scale and quant_out: every output row (codes
+    and its emitted y_scale) is bit-identical to running that image
+    alone — the kernel's per-image eff_scale row and per-row amax
+    reduction compose correctly in both lowerings."""
+    monkeypatch.setenv("REPRO_PALLAS", lowering)
+    k, stride, N = 3, 1, 3
+    key = jax.random.PRNGKey(2)
+    x = jax.random.randint(key, (N, 8, 8, 8), -127, 128, jnp.int8)
+    qt = q.quantize_int7(
+        jax.random.normal(jax.random.fold_in(key, 1), (8 * k * k, 16)) * 0.1)
+    s_x = jnp.asarray([0.01, 0.5, 2.0], jnp.float32)   # one domain per image
+    y_q, s_y = ops.conv2d(x, qt.values, k, stride, x_scale=s_x,
+                          w_scale=qt.scale.reshape(-1), quant_out=True)
+    assert s_y.shape == (N,)
+    for i in range(N):
+        yi, si = ops.conv2d(x[i:i + 1], qt.values, k, stride,
+                            x_scale=s_x[i:i + 1],
+                            w_scale=qt.scale.reshape(-1), quant_out=True)
+        np.testing.assert_array_equal(np.asarray(y_q[i:i + 1]),
+                                      np.asarray(yi))
+        np.testing.assert_array_equal(np.asarray(s_y[i:i + 1]),
+                                      np.asarray(si))
+    # scalar x_scale still means per-tensor: scalar y_scale (legacy)
+    _, s_leg = ops.conv2d(x, qt.values, k, stride, x_scale=0.05,
+                          w_scale=qt.scale.reshape(-1), quant_out=True)
+    assert s_leg.ndim == 0
+
+
+# ---------------------------------------------------------------------------
+# Model level: packing invariance = the continuous-batching licence
+# ---------------------------------------------------------------------------
+
+_params_cache = {}
+
+
+def _compiled(mode):
+    if mode not in _params_cache:
+        params = resnet.init(jax.random.PRNGKey(0), CFG)
+        _params_cache[mode] = nn.unbox(
+            cl.compile_params(params, mode=mode, sparsity=0.5))
+    return _params_cache[mode]
+
+
+def _images(n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (n, CFG.in_hw, CFG.in_hw, 3))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_forward_packing_invariant_jnp(monkeypatch, mode):
+    """Bit-identical logits for ANY chunking of the batch — including
+    chunkings that pack what were different requests' rows together."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = _compiled(mode)
+    x = _images(6)
+    fn = jax.jit(lambda p, a: resnet.apply(p, a, CFG))
+    full = np.asarray(fn(params, x))
+    for bounds in ([0, 1, 6], [0, 2, 4, 6], [0, 3, 6], [0, 5, 6]):
+        got = np.concatenate([np.asarray(fn(params, x[a:b]))
+                              for a, b in zip(bounds, bounds[1:])])
+        np.testing.assert_array_equal(got, full, err_msg=str((mode, bounds)))
+
+
+@pytest.mark.parametrize("mode", ["int8", "sparse_cfmm"])
+def test_forward_neighbour_invariant_interpret(monkeypatch, mode):
+    """The serving-relevant invariant through the Pallas kernels
+    (interpret mode, batch-2 cells — interpret is slow): at a fixed
+    microbatch shape, a row's logits are bit-identical no matter WHO
+    shares its microbatch or WHERE in it the row sits — which is what
+    continuous cross-request batching swaps around.  (Bit-identity
+    across different batch SHAPES is the jnp oracle's contract above;
+    compiled lowerings may differ across shapes by FMA-contraction
+    ulps, which is why the engine packs fixed-size microbatches.)"""
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    params = _compiled(mode)
+    x = _images(4)
+    fn = jax.jit(lambda p, a: resnet.apply(p, a, CFG))
+    ab = np.asarray(fn(params, x[jnp.asarray([0, 1])]))
+    ac = np.asarray(fn(params, x[jnp.asarray([0, 2])]))
+    da = np.asarray(fn(params, x[jnp.asarray([3, 0])]))
+    np.testing.assert_array_equal(ab[0], ac[0])    # neighbour swapped
+    np.testing.assert_array_equal(ab[0], da[1])    # position swapped
+    np.testing.assert_array_equal(ac[1:], np.asarray(
+        fn(params, x[jnp.asarray([2, 3])]))[:1])   # both at once

@@ -39,7 +39,9 @@ def _block_forward(params, x, k, stride):
         y = resnet._conv_apply(params["b"], y, k, stride)
         h = resnet._conv_apply(params["c"], y, 1, relu=True, shortcut=sc)
         return h, None, None
-    x_q, s = cl.act_quant(x)                       # one quant per block
+    # one quant per block, PER-ROW domains like models/resnet.apply
+    # (DESIGN.md §9) — scales are (N,), every row its own domain
+    x_q, s = cl.act_quant(x, per_row=True)
     sc = resnet._conv_q(params["sc"], x_q, s, relu=False)
     a_q, s_a = resnet._conv_q(params["a"], x_q, s, quant_out=True)
     b_q, s_b = resnet._conv_q(params["b"], a_q, s_a, quant_out=True)
