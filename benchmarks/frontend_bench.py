@@ -1,6 +1,6 @@
 """Replicated-pipeline front-end bench — the fleet behind one front door.
 
-Three sweeps, all recorded to BENCH_frontend.json:
+Five sweeps, all recorded to BENCH_frontend.json:
 
 * **Replica scaling** (n_replicas in {1, 2, 4}, one stage chain each):
   measured wall-clock im/s through the shared admission queue next to the
@@ -25,6 +25,21 @@ Three sweeps, all recorded to BENCH_frontend.json:
   share a microbatch, DESIGN.md §9) vs the whole-request baseline
   (``continuous=False``), at the same offered load.  The gate: packed
   occupancy >= 1.5x the baseline's, p95 no worse.
+* **Fault tolerance** (the 2-replica fleet): kill 1 of 2 replicas
+  mid-flight (``serving.faults.FaultInjector``).  Gates: every request
+  still completes, logits BIT-identical to the no-failure reference
+  (per-row quantization domains make the requeued re-execution exact,
+  DESIGN.md §10), exactly one replica failed with >= 1 requeued span,
+  goodput degrades no worse than proportionally (loose band for
+  container noise), and after ``restart_replica`` the fleet serves on
+  both replicas again with zero failures.
+* **Open loop** (same fleet, recovered): ``serving.loadgen`` Poisson
+  arrivals with a 3:1 small/large request mix replayed in wall time at
+  {0.5, 2, 16}x the fleet's measured row capacity — the
+  latency-vs-offered-load curve plus shed fraction.  The SLO-aware
+  admission gates: a generous p95 budget at low load sheds NOTHING,
+  a tight budget under 16x overload sheds SOMETHING (typed
+  ``Rejected``), and every admitted request completes exactly.
 
 Every run first asserts the fleet's logits are bit-identical to
 ``serving.pipeline.reference_logits`` per request.  (One carve-out: the
@@ -46,7 +61,10 @@ import numpy as np
 from repro import nn
 from repro.core.compiled_linear import compile_params
 from repro.models import resnet
+from repro.serving.faults import Fault, FaultInjector
 from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.loadgen import (offered_rows_per_s, poisson_plan,
+                                   run_open_loop)
 from repro.serving.pipeline import reference_logits
 
 from benchmarks.pipeline_bench import _best_of, _stage_times
@@ -232,4 +250,134 @@ def run(full=False):
     # and does not hurt tail latency at the same offered load
     assert cb["occupancy_ratio"] >= 1.5, cb
     assert cb["p95_ratio"] <= 1.0, cb
+
+    # ---- fault tolerance: kill 1 of 2 replicas mid-flight --------------
+    # mb-aligned requests so a requeue never changes a microbatch SHAPE:
+    # bit-identity holds for every lowering, interpret included
+    n_fault = 6 if interp else 8
+    mk_fault = lambda base: [
+        FrontendRequest(rid=base + i,
+                        images=x[(i * mb) % n_img:(i * mb) % n_img + mb])
+        for i in range(n_fault)]
+    fleet2.reset_stats()
+    reqs = mk_fault(1000)
+    t0 = time.perf_counter()
+    fleet2.run(reqs)
+    wall_h = time.perf_counter() - t0
+    _check_fleet(fleet2, reqs, compiled, cfg, mb)
+    assert fleet2.stats()["replicas_failed"] == 0
+
+    inj = FaultInjector()
+    inj.arm(fleet2.replicas[0], Fault("kill", at_step=2))
+    fleet2.reset_stats()
+    reqs = mk_fault(2000)
+    t0 = time.perf_counter()
+    fleet2.run(reqs)
+    wall_f = time.perf_counter() - t0
+    # the acceptance gate: the fleet lost a replica mid-flight and every
+    # request still completed BIT-identical to the no-failure reference
+    _check_fleet(fleet2, reqs, compiled, cfg, mb)
+    st = fleet2.stats()
+    assert st["replicas_failed"] == 1 and st["failed"] == [True, False], st
+    assert st["requeues"] >= 1 and st["rows_requeued"] >= 1, st
+    inj.disarm(fleet2.replicas[0])
+
+    fleet2.restart_replica(0)
+    fleet2.reset_stats()
+    reqs = mk_fault(3000)
+    fleet2.run(reqs)
+    _check_fleet(fleet2, reqs, compiled, cfg, mb)
+    st3 = fleet2.stats()
+    assert st3["replicas_failed"] == 0, st3
+    assert all(r > 0 for r in st3["rows_dispatched"]), st3
+    goodput_ratio = wall_h / wall_f if wall_f > 0 else None
+    out["fault_tolerance"] = {
+        "requests": n_fault,
+        "kill_at_step": 2,
+        "wall_healthy_s": wall_h,
+        "wall_killed_s": wall_f,
+        "goodput_ratio_killed_over_healthy": goodput_ratio,
+        "replicas_failed": st["replicas_failed"],
+        "requeues": st["requeues"],
+        "rows_requeued": st["rows_requeued"],
+        "bit_identical": True,                 # asserted above
+        "restart_rows_dispatched": st3["rows_dispatched"],
+    }
+    print(f"   fault tolerance: kill 1/2 replicas mid-flight -> all "
+          f"{n_fault} requests bit-identical | {st['rows_requeued']} rows "
+          f"requeued | goodput ratio {goodput_ratio:.2f} | restart "
+          f"rebalances {st3['rows_dispatched']}")
+    # losing 1 of 2 replicas halves capacity; requeue overhead may cost a
+    # little more, scheduler noise a little either way — gate the floor
+    assert goodput_ratio >= 0.2, out["fault_tolerance"]
+
+    # ---- open loop: Poisson arrivals vs measured capacity --------------
+    # warm the 1-row microbatch shape on BOTH replicas (two 1-row
+    # requests route to distinct least-loaded replicas), then calibrate
+    # the service rate on steady-state completions only — the EWMA's
+    # first samples would otherwise absorb jit compilation, and a
+    # mid-wave compile stall reads as a 1000x backlog to the admission
+    # estimate (DESIGN.md §10)
+    fleet2.run([FrontendRequest(rid=4000, images=x[:1]),
+                FrontendRequest(rid=4001, images=x[1:2])])
+    fleet2.reset_service_rate()
+    fleet2.run(mk_fault(4100))
+    row_time = fleet2.stats()["est_row_time_s"]
+    cap_rows_s = 1.0 / row_time
+    mix = ((1, 3.0), (2, 1.0))                 # mostly-small traffic
+    mean_rows = 1.25
+    n_ol = 12 if interp else 16
+    # per-factor p95 budgets, in units of the measured per-row time: the
+    # low-load wave gets a generous budget (gate: sheds NOTHING — no
+    # false positives from Poisson burstiness), the 16x overload wave a
+    # tight one (gate: sheds SOMETHING rather than queueing unboundedly)
+    slo_rows = {0.5: 40.0, 2.0: 40.0, 16.0: 8.0}
+    ol = {"capacity_rows_s": cap_rows_s, "est_row_time_s": row_time,
+          "requests_per_factor": n_ol, "size_mix": [list(m) for m in mix],
+          "factors": {}}
+    print(f"   open loop: capacity {cap_rows_s:7.1f} rows/s "
+          f"(row time {row_time * 1e3:.2f} ms), {n_ol} requests/factor")
+    for factor in (0.5, 2.0, 16.0):
+        fleet2.slo_p95_s = slo_rows[factor] * row_time
+        fleet2.reset_stats()
+        plan = poisson_plan(rate_rps=factor * cap_rows_s / mean_rows,
+                            n_requests=n_ol, image_pool=x, size_mix=mix,
+                            seed=int(factor * 10))
+        res = run_open_loop(fleet2, plan, max_wall_s=600)
+        assert res["admitted"] + res["rejected"] == res["offered"] == n_ol
+        for r in res["admitted_requests"]:
+            ref = np.asarray(reference_logits(compiled, cfg,
+                                              jnp.asarray(r.images), mb))
+            if interp:
+                # the size mix packs 1-row requests into 2-row
+                # microbatches: cross-SHAPE, FMA-ulp exact (same
+                # carve-out as the continuous-batching wave)
+                np.testing.assert_allclose(np.asarray(r.logits), ref,
+                                           rtol=2e-5, atol=1e-6)
+            else:
+                np.testing.assert_array_equal(np.asarray(r.logits), ref)
+        row = {
+            "offered_rows_s": offered_rows_per_s(plan),
+            "slo_p95_s": fleet2.slo_p95_s,
+            "admitted": res["admitted"],
+            "rejected": res["rejected"],
+            "shed_fraction": res["shed_fraction"],
+            "goodput_rows_s": res["goodput_rows_s"],
+            "latency_p50_s": res["latency_p50_s"],
+            "latency_p95_s": res["latency_p95_s"],
+            "wall_s": res["wall_s"],
+        }
+        ol["factors"][str(factor)] = row
+        print(f"   open loop {factor:4.1f}x: offered "
+              f"{row['offered_rows_s']:7.1f} rows/s | admitted "
+              f"{res['admitted']:2d} | shed {res['rejected']:2d} | p95 "
+              f"{res['latency_p95_s'] * 1e3:7.1f} ms")
+        # SLO admission gates: no false shedding under budget at low
+        # load; typed shedding instead of an unbounded queue at 16x
+        if factor == 0.5:
+            assert res["rejected"] == 0, row
+        if factor == 16.0:
+            assert res["rejected"] > 0, row
+    fleet2.slo_p95_s = None
+    out["open_loop"] = ol
     return out

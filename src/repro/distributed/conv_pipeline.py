@@ -134,6 +134,28 @@ class ConvPipeline:
     def inlet_free(self) -> bool:
         return self._inlet[0] is None
 
+    @property
+    def inlet_occupancy(self) -> tuple:
+        """Which stage inlets hold a buffered microbatch — a microbatch
+        advancing one stage flips two cells, so any healthy busy tick
+        changes this pattern.  Part of the progress marker the serving
+        front-end's per-replica watchdog hashes (DESIGN.md §10)."""
+        return tuple(b is not None for b in self._inlet)
+
+    def cancel_in_flight(self) -> list:
+        """Drop every buffered microbatch and return their tags (the
+        per-row segment lists the engine injected) so the caller can
+        requeue the rows elsewhere — the drain half of replica failure
+        recovery.  Cancelled microbatches never reach
+        ``microbatches_done``; the chain is idle afterwards."""
+        tags = []
+        for s in range(self.n_stages):
+            if self._inlet[s] is not None and self._tags[s] is not None:
+                tags.append(self._tags[s])
+            self._inlet[s] = None
+            self._tags[s] = None
+        return tags
+
     def reset_counters(self):
         """Zero the schedule counters (ticks, microbatches done — the
         bubble-fraction basis) so the next wave's stats stand alone;

@@ -12,6 +12,14 @@ ONCE, places each replica's stage subtrees on its own group, and streams
 a wave of requests through the shared admission queue with least-loaded
 routing — reporting aggregate throughput, per-replica rows/bubble, queue
 depth, and p50/p95 request latency.
+
+Fault drill (--kill-replica R [--kill-step K]): after the healthy wave,
+arm a fail-stop on replica R, rerun the same traffic, report the
+watchdog/requeue recovery, then restart the replica and show the fleet
+rebalanced.  Open loop (--open-loop FACTOR [--slo-rows N]): replay a
+Poisson arrival plan at FACTOR x the fleet's measured row capacity, with
+an optional p95 admission budget of N measured row-times — reports
+goodput, shed fraction, and p50/p95 (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -22,7 +30,10 @@ import jax
 import numpy as np
 
 from repro.models import resnet
+from repro.serving.faults import Fault, FaultInjector
 from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.loadgen import (offered_rows_per_s, poisson_plan,
+                                   run_open_loop)
 
 
 def main(argv=None):
@@ -38,6 +49,21 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rows", type=int, default=4,
                     help="images per request")
+    ap.add_argument("--watchdog-ticks", type=int, default=8,
+                    help="no-progress steps before a replica is failed")
+    ap.add_argument("--kill-replica", type=int, default=None, metavar="R",
+                    help="fault drill: fail-stop replica R mid-wave, "
+                         "recover, restart")
+    ap.add_argument("--kill-step", type=int, default=2,
+                    help="engine step (after arming) at which the "
+                         "fail-stop engages")
+    ap.add_argument("--open-loop", type=float, default=None,
+                    metavar="FACTOR",
+                    help="Poisson open-loop wave at FACTOR x measured "
+                         "capacity")
+    ap.add_argument("--slo-rows", type=float, default=None, metavar="N",
+                    help="p95 admission budget: N x measured per-row "
+                         "time (open loop only; default: no shedding)")
     args = ap.parse_args(argv)
 
     cfg = resnet.ResNetConfig(width_mult=args.width, num_classes=100,
@@ -45,7 +71,8 @@ def main(argv=None):
     params = resnet.init(jax.random.PRNGKey(0), cfg)
     fe = ResNetFrontend(cfg, params, mode=args.mode,
                         sparsity=args.sparsity, n_replicas=args.replicas,
-                        n_stages=args.stages, microbatch=args.microbatch)
+                        n_stages=args.stages, microbatch=args.microbatch,
+                        watchdog_ticks=args.watchdog_ticks)
     rng = np.random.RandomState(0)
 
     def wave():
@@ -72,6 +99,60 @@ def main(argv=None):
         print(f"  replica {r}: {st['rows_dispatched'][r]} rows / "
               f"{st['requests_dispatched'][r]} requests, bubble "
               f"{rs['bubble_fraction']:.2f}, devices {rs['stage_devices']}")
+
+    if args.kill_replica is not None:
+        inj = FaultInjector()
+        inj.arm(fe.replicas[args.kill_replica],
+                Fault("kill", at_step=args.kill_step))
+        fe.reset_stats()
+        reqs = wave()
+        t0 = time.time()
+        fe.run(reqs)
+        dt = time.time() - t0
+        st = fe.stats()
+        done = sum(r.done for r in reqs)
+        print(f"[faults] killed replica {args.kill_replica} at step "
+              f"{args.kill_step}: {done}/{len(reqs)} requests completed "
+              f"in {dt:.2f}s | replicas failed {st['replicas_failed']} | "
+              f"{st['rows_requeued']} rows requeued over "
+              f"{st['requeues']} spans")
+        inj.disarm(fe.replicas[args.kill_replica])
+        fe.restart_replica(args.kill_replica)
+        fe.reset_stats()
+        fe.run(wave())
+        st = fe.stats()
+        print(f"[faults] replica {args.kill_replica} restarted: "
+              f"rows/replica {st['rows_dispatched']}, failures "
+              f"{st['replicas_failed']}")
+
+    if args.open_loop is not None:
+        # warm the 1-row microbatch shape on every replica, then measure
+        # the service rate on steady-state completions only
+        fe.run([FrontendRequest(rid=-(r + 1),
+                                images=rng.randn(1, args.hw, args.hw,
+                                                 3).astype(np.float32))
+                for r in range(args.replicas)])
+        fe.reset_service_rate()
+        fe.run(wave())
+        st = fe.stats()
+        cap = st["est_rows_per_s"]
+        if args.slo_rows is not None:
+            fe.slo_p95_s = args.slo_rows * st["est_row_time_s"]
+        pool = rng.randn(8, args.hw, args.hw, 3).astype(np.float32)
+        plan = poisson_plan(rate_rps=args.open_loop * cap / 1.25,
+                            n_requests=args.requests, image_pool=pool,
+                            size_mix=((1, 3.0), (2, 1.0)), seed=0,
+                            rid_base=10_000)
+        fe.reset_stats()
+        res = run_open_loop(fe, plan)
+        print(f"[open-loop] {args.open_loop:.1f}x capacity "
+              f"({cap:.1f} rows/s): offered "
+              f"{offered_rows_per_s(plan):.1f} rows/s | admitted "
+              f"{res['admitted']}/{res['offered']} | shed "
+              f"{res['rejected']} ({res['shed_fraction']:.0%}) | goodput "
+              f"{res['goodput_rows_s']:.1f} rows/s | p50 "
+              f"{res['latency_p50_s'] * 1e3:.1f} ms | p95 "
+              f"{res['latency_p95_s'] * 1e3:.1f} ms")
     return fe
 
 

@@ -134,6 +134,11 @@ class PipelineEngine:
         self._rows_in_flight = 0
         self._mb_injected = 0
         self._rows_injected = 0
+        # lifetime odometer (never reset, unlike the wave counters
+        # reset_counters zeroes): rows delivered back to requests — the
+        # front door differences it to estimate fleet service rate, and
+        # the watchdog folds it into progress_marker
+        self.rows_completed = 0
 
     # -- stage planning -------------------------------------------------
     def _resolve_plan(self, plan, stage_blocks, n_stages, n_blocks,
@@ -261,6 +266,7 @@ class PipelineEngine:
                 off += n
             assert off == out.shape[0], (off, out.shape)
             self._rows_in_flight -= out.shape[0]
+            self.rows_completed += out.shape[0]
         return True
 
     def run(self, requests: list) -> list:
@@ -285,6 +291,50 @@ class PipelineEngine:
     def _scan_pending_rows(self) -> int:
         """The linear-scan oracle for ``pending_rows`` (tests only)."""
         return sum(sp.remaining for sp in self.queue) + self._rows_in_flight
+
+    # -- health surface (consumed by serving/frontend.py) ----------------
+    @property
+    def progress_marker(self) -> tuple:
+        """A snapshot that changes on EVERY healthy busy step: rows
+        delivered, rows queued, rows in flight, and the stage-inlet
+        occupancy pattern (a microbatch advancing one stage flips two
+        cells even when the aggregate counts hold still, e.g. one
+        microbatch traversing a deep pipe).  The front door's watchdog
+        marks a replica failed when this freezes for ``watchdog_ticks``
+        steps while ``pending_rows``/``pipe.busy`` say it has work
+        (DESIGN.md §10)."""
+        return (self.rows_completed, self._queued_rows,
+                self._rows_in_flight, self.pipe.inlet_occupancy)
+
+    def extract_pending(self) -> list:
+        """Cancel everything this engine still owes and return it as
+        ``(request, start, stop)`` row spans — the drain half of replica
+        failure recovery.  Covers both the un-injected queue spans and
+        the rows buffered in stage inlets (via
+        ``ConvPipeline.cancel_in_flight``; their ``rows_submitted`` is
+        rewound so re-execution accounting starts clean).  Rows that
+        already scattered back to their requests are NOT extracted —
+        they were delivered by the same program every replica runs, and
+        per-row quantization domains make the re-executed remainder
+        bit-identical to the never-failed reference (DESIGN.md §9/§10).
+        Leaves the engine idle: empty queue, empty inlets, zeroed
+        pending-row accounting."""
+        spans = []
+        for segs in self.pipe.cancel_in_flight():
+            for req, start, n in segs:
+                req.rows_submitted -= n
+                spans.append((req, start, start + n))
+        self._rows_in_flight = 0
+        for sp in self.queue:
+            if sp.remaining:
+                spans.append((sp.req, sp.cursor, sp.stop))
+            elif len(sp.req.images) == 0 and not sp.req.done:
+                # a queued zero-row request completes here, as
+                # _next_microbatch would have
+                self._complete_empty(sp.req, self.cfg.num_classes)
+        self.queue.clear()
+        self._queued_rows = 0
+        return spans
 
     def run_batch(self, x) -> jnp.ndarray:
         """Convenience: one anonymous request, returns stacked logits."""

@@ -288,6 +288,60 @@ def test_submit_validation_rejects_malformed(monkeypatch):
                                                         MB))
 
 
+def test_resubmit_live_request_and_duplicate_rid_rejected(monkeypatch):
+    """Re-submitting a request object that is still queued/in-flight, or
+    a second request reusing a live rid, used to silently reset the
+    victim's dispatch accounting mid-flight — both now raise a clear
+    ValueError and leave the fleet untouched.  Once the original request
+    completes, both its object and its rid are reusable again."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=1,
+                        microbatch=MB)
+    req = FrontendRequest(rid=7, images=_images(6))    # 3 microbatches
+    fe.submit(req)                                 # queued, not yet run
+    with pytest.raises(ValueError, match="already queued or in flight"):
+        fe.submit(req)
+    with pytest.raises(ValueError, match="duplicates a live request"):
+        fe.submit(FrontendRequest(rid=7, images=_images(2, seed=9)))
+    assert len(fe.queue) == 1                      # victim untouched
+    fe.step()                                      # req now mid-flight
+    assert not req.done and req.rows_done < len(req.images)
+    with pytest.raises(ValueError, match="already queued or in flight"):
+        fe.submit(req)
+    while fe.step():
+        pass
+    assert req.done
+    np.testing.assert_array_equal(req.logits, _reference("int8", req.images,
+                                                         MB))
+    # drained: the same object and the same rid are both legal again
+    fe.run([req])
+    assert req.done
+    other = FrontendRequest(rid=7, images=_images(1, seed=3))
+    fe.run([other])
+    assert other.done
+
+
+def test_latency_window_bounds_samples(monkeypatch):
+    """The latency reservoir is a bounded deque: an open-loop serve that
+    completes requests forever holds at most ``latency_window`` samples
+    (stats() reports the bound and the current fill), and the p50/p95
+    reflect only the most recent window."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8", n_replicas=1,
+                        microbatch=MB, latency_window=4)
+    for i in range(8):
+        fe.run([FrontendRequest(rid=i, images=_images(1, seed=i))])
+    st = fe.stats()
+    assert st["requests_done"] == 8                # all completed...
+    assert st["latency_samples"] == 4              # ...window kept 4
+    assert st["latency_window"] == 4
+    assert len(fe._latencies) == 4
+    assert st["latency_p95_s"] >= st["latency_p50_s"] > 0
+    with pytest.raises(AssertionError):
+        ResNetFrontend(CFG, _compiled("int8"), mode="int8",
+                       latency_window=0)
+
+
 def test_two_small_requests_share_a_microbatch(monkeypatch):
     """The continuous-batching demonstrator: two 1-row requests on one
     replica ride in ONE shared microbatch (occupancy 1.0, one injection)
