@@ -137,11 +137,23 @@ def run(full=False):
             assert len(rates) == n_replicas, (rates, st)
             assert all(0.2 * chain_rate < r < 5.0 * chain_rate
                        for r in rates), (rates, chain_rate)
+        # bubble attribution (DESIGN.md §11): which stage and which
+        # cause for every idle stage-tick of the measured wave; the
+        # per-cause counts must sum to bubble_fraction · S · ticks
+        # exactly (the drained-wave identity) on every replica
+        for rs in st["replicas"]:
+            attr_sum = sum(sum(v) for v in
+                           rs["bubble_attribution"].values())
+            assert attr_sum == rs["idle_stage_ticks"], (attr_sum, rs)
+            total = rs["n_stages"] * rs["ticks"]
+            assert abs(attr_sum - rs["bubble_fraction"] * total) < 1e-9, rs
         row = {
             "wall_im_s": n_img / wall,
             "aggregate_im_s": n_replicas * chain_rate,
             "replica_im_s": rates,
             "replica_bubble": st["replica_bubble"],
+            "bubble_attribution": [rs["bubble_attribution"]
+                                   for rs in st["replicas"]],
             "rows_dispatched": st["rows_dispatched"],
             "max_queue_depth": st["max_queue_depth"],
         }

@@ -2,11 +2,15 @@
 roofline table and kernel micro-benchmarks.
 
   PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
+  PYTHONPATH=src python -m benchmarks.run --report
 
 Outputs land in experiments/bench/ and are summarized to stdout; each
 section also *appends* to a BENCH_<name>.json trajectory file at the repo
 root ({ts, git, args, result} per run), so perf is tracked across PRs.
---smoke runs a quick subset (used by CI on every push).
+--smoke runs a quick subset (used by CI on every push).  --report prints
+one line per trajectory file — the headline metric of the latest run,
+the git sha it came from, and the delta against the previous entry —
+without running anything.
 """
 from __future__ import annotations
 
@@ -20,7 +24,18 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT_DIR = ROOT / "experiments" / "bench"
 
 SMOKE_SECTIONS = ("table1_design_params", "conv", "sparse_conv",
-                  "pipeline", "frontend")
+                  "pipeline", "frontend", "telemetry")
+
+# --report headline metric per trajectory (dotted path into `result`);
+# sections not listed fall back to the first numeric leaf found
+HEADLINES = {
+    "conv": "cpu_speedup",
+    "sparse_conv": "layers.conv2_x_b 3x3.bits_per_param",
+    "pipeline": "modes.int8.pipeline_scaling_4_over_1",
+    "frontend": "open_loop.capacity_rows_s",
+    "telemetry": "overhead_trace",
+    "table1_design_params": "rows.conv2_x.mac_per_param",
+}
 
 
 def _git_sha() -> str:
@@ -50,16 +65,94 @@ def _append_trajectory(name: str, entry: dict) -> None:
     path.write_text(json.dumps(history, indent=1, default=str) + "\n")
 
 
+def _dig(result, path):
+    """Resolve a dotted HEADLINES path; None when any hop is missing."""
+    cur = result
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def _first_numeric(obj, path=""):
+    """Depth-first first numeric leaf — the fallback headline."""
+    if isinstance(obj, bool):
+        return None, None
+    if isinstance(obj, (int, float)):
+        return path, obj
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p, leaf = _first_numeric(v, f"{path}.{k}" if path else k)
+            if leaf is not None:
+                return p, leaf
+    return None, None
+
+
+def _headline(name, result):
+    path = HEADLINES.get(name)
+    if path is not None:
+        val = _dig(result, path)
+        if val is not None:
+            return path.rsplit(".", 1)[-1], val
+    return _first_numeric(result)
+
+
+def report() -> None:
+    """One line per BENCH_<name>.json: latest headline, sha, delta."""
+    files = sorted(ROOT.glob("BENCH_*.json"))
+    if not files:
+        print("no BENCH_*.json trajectories at repo root; run "
+              "`python -m benchmarks.run --smoke` first")
+        return
+    for path in files:
+        name = path.stem[len("BENCH_"):]
+        try:
+            history = json.loads(path.read_text())
+            assert isinstance(history, list) and history
+        except Exception:
+            print(f"{name:24s} (unparseable trajectory)")
+            continue
+        cur = history[-1]
+        label, val = _headline(name, cur.get("result", {}))
+        if label is None:
+            print(f"{name:24s} {len(history)} runs @{cur.get('git', '?')} "
+                  f"(no numeric headline)")
+            continue
+        delta = ""
+        # delta vs the most recent PREVIOUS entry carrying this metric
+        for prev in reversed(history[:-1]):
+            pv = _dig(prev.get("result", {}),
+                      HEADLINES.get(name, label)) if HEADLINES.get(
+                          name) else _first_numeric(
+                              prev.get("result", {}))[1]
+            if pv is not None:
+                delta = (f"  {'Δ' if pv else ''}"
+                         f"{(val - pv) / pv:+.1%} vs {prev.get('git', '?')}"
+                         if pv else f"  (prev 0 @{prev.get('git', '?')})")
+                break
+        print(f"{name:24s} {label} = {val:.4g}  @{cur.get('git', '?')} "
+              f"({len(history)} runs){delta}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger kernel sweeps / serving runs")
     ap.add_argument("--smoke", action="store_true",
                     help=f"quick CI subset: {', '.join(SMOKE_SECTIONS)}")
+    ap.add_argument("--report", action="store_true",
+                    help="summarize BENCH_*.json trajectories (one line "
+                         "per bench: headline metric, sha, delta vs "
+                         "previous) and exit")
     args = ap.parse_args(argv)
+    if args.report:
+        report()
+        return
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     from benchmarks import fig7, frontend_bench, kernel_bench, \
-        pipeline_bench, roofline_table, serving_bench, table1, table2
+        pipeline_bench, roofline_table, serving_bench, table1, table2, \
+        telemetry_bench
 
     sections = [("table1_design_params", table1.run),
                 ("table2_kernel_results", table2.run),
@@ -70,6 +163,7 @@ def main(argv=None) -> None:
                 ("sparse_conv", kernel_bench.run_sparse_conv),
                 ("pipeline", pipeline_bench.run),
                 ("frontend", frontend_bench.run),
+                ("telemetry", telemetry_bench.run),
                 ("serving_bench", serving_bench.run)]
     if args.smoke:
         sections = [s for s in sections if s[0] in SMOKE_SECTIONS]

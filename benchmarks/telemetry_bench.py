@@ -1,0 +1,211 @@
+"""Telemetry bench — the observability layer's cost and exactness gates
+(DESIGN.md §11), recorded to BENCH_telemetry.json.
+
+Three sections:
+
+* **Overhead** — the same closed-loop wave through four fleets sharing
+  one compiled tree: *base* (``telemetry=None``), *off* (a ``Telemetry``
+  object attached but with tracing and sparsity profiling disabled — the
+  cost of the ``is None`` guards and lifecycle stamps), *trace* (span
+  tracing + metrics on), and *profiled* (tracing + activation-sparsity
+  profiling).  Timed rounds are INTERLEAVED across the fleets and the
+  best-of minimum per fleet is compared, so machine drift hits every
+  fleet alike and the minima are stable where single-shot CPU timings
+  are not.  Gates: telemetry-off within **2%** of base, tracing within
+  **10%**.  The profiled fleet's overhead is recorded but not gated —
+  sparsity profiling adds real per-layer zero-count compute to every
+  conv launch (observation-only for the *logits*, not for the clock),
+  so a wall-clock budget there would gate the model size, not the
+  telemetry.
+* **Bit-identity** — every request's logits from all four fleets are
+  bit-identical to ``reference_logits`` and to each other: tracing reads
+  timestamps and sparsity profiling reads the f32 Collector output that
+  already exists, so observation never perturbs the computation.
+* **Sparsity exactness** — the profiled fleet's accumulated activation
+  histograms are compared against ``reference_profile``'s exact jnp
+  recount of the same rows: zero counts and per-image histogram buckets
+  must match EXACTLY when serving ran the jnp lowering (CPU default);
+  under a Pallas lowering the comparison is on fractions to 1e-5 (the
+  only divergence channel is a pre-activation value within one ulp of
+  0.0 crossing the ReLU boundary differently between lowerings).
+
+Plus the trace-schema gate: the profiled fleet's Chrome trace export passes
+``repro.obs.trace.validate_chrome_trace`` and contains the full
+admission → queue → dispatch → stage-tick → collect span chain for
+every completed request.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import nn
+from repro.core.compiled_linear import compile_params
+from repro.kernels import ops
+from repro.models import resnet
+from repro.obs import Telemetry
+from repro.obs.trace import validate_chrome_trace
+from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.pipeline import reference_logits, reference_profile
+
+OFF_BUDGET = 0.02          # telemetry-off overhead gate vs base
+TRACE_BUDGET = 0.10        # tracing+metrics overhead gate vs base
+GROUPS = 8                 # coarse_in lane-group size profiled
+
+
+def _wave(x, mb, rid_base=0):
+    return [FrontendRequest(rid=rid_base + i, images=x[i:i + mb])
+            for i in range(0, len(x), mb)]
+
+
+def run(full=False):
+    width, hw, n_img, mb, iters = ((0.25, 32, 32, 2, 8) if full
+                                   else (0.125, 16, 32, 2, 8))
+    if os.environ.get("REPRO_PALLAS") == "interpret" and not full:
+        width, hw, n_img, mb, iters = 0.125, 8, 8, 2, 4
+    cfg = resnet.ResNetConfig(width_mult=width, num_classes=100, in_hw=hw)
+    params = resnet.init(jax.random.PRNGKey(0), cfg)
+    compiled = nn.unbox(compile_params(params, mode="int8", sparsity=0.8))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                     (n_img, hw, hw, 3)))
+    kw = dict(mode="int8", n_replicas=2, n_stages=2, microbatch=mb)
+    print(f" telemetry overhead + exactness ({hw}x{hw}, width {width}, "
+          f"{n_img} images, best-of-{iters} interleaved):")
+
+    tel = Telemetry(trace=True, sparsity_groups=GROUPS)
+    fleets = {
+        "base": ResNetFrontend(cfg, compiled, **kw),
+        "off": ResNetFrontend(cfg, compiled, telemetry=Telemetry(), **kw),
+        "trace": ResNetFrontend(cfg, compiled,
+                                telemetry=Telemetry(trace=True), **kw),
+        "profiled": ResNetFrontend(cfg, compiled, telemetry=tel, **kw),
+    }
+    logits = {}
+    for name, fe in fleets.items():
+        fe.run(_wave(x, mb))                   # warmup: compiles replicas
+        reqs = _wave(x, mb, rid_base=100)
+        fe.run(reqs)                           # the exactness wave
+        logits[name] = np.concatenate([np.asarray(r.logits)
+                                       for r in reqs])
+
+    # interleave the timed rounds across the fleets — rotating the order
+    # each round so no fleet always inherits another's cache state — and
+    # compare best-of minima, which are stable against machine drift
+    # (CPU frequency, background load) where single shots are not
+    walls = {name: float("inf") for name in fleets}
+    order = list(fleets)
+    for it in range(iters):
+        for name in order[it % len(order):] + order[:it % len(order)]:
+            reqs = _wave(x, mb, rid_base=1000 * (it + 1))
+            t0 = time.perf_counter()
+            fleets[name].run(reqs)
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+
+    # -- bit-identity: observation never perturbs the computation ------
+    ref = np.asarray(reference_logits(compiled, cfg, x, mb))
+    for name, lg in logits.items():
+        np.testing.assert_array_equal(lg, ref, err_msg=name)
+
+    # -- overhead gates (on best-of minima) ----------------------------
+    over_off = walls["off"] / walls["base"] - 1.0
+    over_trace = walls["trace"] / walls["base"] - 1.0
+    over_profiled = walls["profiled"] / walls["base"] - 1.0
+    assert over_off <= OFF_BUDGET, (
+        f"telemetry-off overhead {over_off:.1%} exceeds "
+        f"{OFF_BUDGET:.0%} budget", walls)
+    assert over_trace <= TRACE_BUDGET, (
+        f"tracing overhead {over_trace:.1%} exceeds "
+        f"{TRACE_BUDGET:.0%} budget", walls)
+    print(f"   wall best-of-{iters}: base {walls['base'] * 1e3:.1f} ms | "
+          f"off {walls['off'] * 1e3:.1f} ms ({over_off:+.1%}) | trace "
+          f"{walls['trace'] * 1e3:.1f} ms ({over_trace:+.1%}) | profiled "
+          f"{walls['profiled'] * 1e3:.1f} ms ({over_profiled:+.1%}, "
+          f"ungated); logits bit-identical across all four")
+
+    # -- sparsity exactness vs the jnp recount oracle ------------------
+    # the profiled fleet served warmup + exactness + iters timed waves
+    # of the same pool: every row of x was profiled (2 + iters) times,
+    # so the oracle is the same pool repeated — counts are additive
+    reps = 2 + iters
+    pool = np.concatenate([x] * reps)
+    served = tel.sparsity.snapshot()
+    _, oracle = reference_profile(compiled, cfg, pool, mb, GROUPS,
+                                  lowering="jnp")
+    exact = ops._mode() == "jnp"
+    for lay, a in served["layers"].items():
+        b = oracle["layers"][lay]
+        assert a["n_rows"] == b["n_rows"], (lay, a["n_rows"], b["n_rows"])
+        if exact:
+            assert a["zeros"] == b["zeros"], (lay, a["zeros"], b["zeros"])
+            assert (a["row_fraction_hist"]["counts"]
+                    == b["row_fraction_hist"]["counts"]), lay
+            assert (a["group_zero_fraction"] == b["group_zero_fraction"]
+                    ), lay
+        else:
+            np.testing.assert_allclose(
+                a["zero_fraction"], b["zero_fraction"], atol=1e-5,
+                err_msg=lay)
+            np.testing.assert_allclose(
+                a["group_zero_fraction"], b["group_zero_fraction"],
+                atol=1e-5, err_msg=lay)
+    print(f"   sparsity: {len(served['layers'])} layers over "
+          f"{served['microbatches_profiled']} microbatches, overall "
+          f"post-ReLU zero fraction {served['overall_zero_fraction']:.3f}"
+          f" — {'EXACT match' if exact else 'fractions to 1e-5'} vs the "
+          f"jnp recount oracle")
+
+    # -- trace schema + per-request span chain -------------------------
+    obj = tel.trace.to_chrome_trace()
+    errs = validate_chrome_trace(obj)
+    assert not errs, errs[:5]
+    spans_by_rid = {}
+    for e in obj["traceEvents"]:
+        if e["ph"] == "B" and e.get("cat") == "request":
+            spans_by_rid.setdefault(e["tid"], set()).add(e["name"])
+    chain = {"admission", "queue", "dispatch", "collect"}
+    assert spans_by_rid and all(v == chain for v in spans_by_rid.values()
+                                ), spans_by_rid
+    stage_spans = sum(1 for e in obj["traceEvents"]
+                      if e["ph"] == "B" and e.get("cat") == "pipeline")
+    assert stage_spans > 0
+    print(f"   trace: {len(obj['traceEvents'])} events valid; full "
+          f"span chain for {len(spans_by_rid)} requests, {stage_spans} "
+          f"stage-tick spans")
+
+    on_stats = fleets["profiled"].stats()
+    return {
+        "config": dict(width_mult=width, in_hw=hw, images=n_img,
+                       microbatch=mb, iters=iters, groups=GROUPS),
+        "wall_s": walls,
+        "overhead_off": over_off,
+        "overhead_trace": over_trace,
+        "overhead_profiled": over_profiled,
+        "budgets": {"off": OFF_BUDGET, "trace": TRACE_BUDGET},
+        "logits_bit_identical": True,
+        "sparsity": {
+            "exact_vs_oracle": exact,
+            "overall_zero_fraction": served["overall_zero_fraction"],
+            "microbatches_profiled": served["microbatches_profiled"],
+            "layers_profiled": len(served["layers"]),
+            "top_zero_layers": dict(sorted(
+                ((k, v["zero_fraction"])
+                 for k, v in served["layers"].items()),
+                key=lambda kv: -kv[1])[:5]),
+        },
+        "trace": {
+            "events": len(obj["traceEvents"]),
+            "valid": True,
+            "requests_with_full_chain": len(spans_by_rid),
+            "stage_tick_spans": stage_spans,
+            "dropped_events": obj["otherData"]["dropped_events"],
+        },
+        "bubble_attribution": [rs["bubble_attribution"]
+                               for rs in on_stats["replicas"]],
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -265,12 +265,15 @@ def conv_codes_of(w: dict):
 
 
 def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
-               shortcut=None, relu: bool = True, quant_out: bool = False):
+               shortcut=None, relu: bool = True, quant_out: bool = False,
+               zero_count: int | None = None):
     """Fused conv forward for a compiled conv leaf (carries its geometry).
 
     x_q (N, H, W, c_in) int8 + its scalar scale; gamma/beta are the
     folded-BN scale and bias Collector vectors.  Returns f32 NHWC, or
     (int8, scale) with quant_out (see kernels.ops.conv2d).
+    ``zero_count`` opts into activation-sparsity profiling: the zero-count
+    aux dict is appended to the return, observation-only (DESIGN.md §11).
 
     Dispatch rides the leaf's storage keys: ``bitmap`` leaves hand the
     packed (bitmap, values) pair straight to the bitmap-native sparse conv
@@ -289,7 +292,7 @@ def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
     return ops.conv2d(x_q, codes, geom.k, geom.stride, x_scale=x_scale,
                       w_scale=w["scale"], gamma=gamma, beta=beta,
                       shortcut=shortcut, relu=relu, quant_out=quant_out,
-                      w_layout="spatial")
+                      w_layout="spatial", zero_count=zero_count)
 
 
 # ---------------------------------------------------------------------------

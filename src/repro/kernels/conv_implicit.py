@@ -71,7 +71,8 @@ def conv_tap_macs(x, k, stride, h_out, w_out, n_cols, tap_weights,
 
 
 def collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref, *,
-                       m_out, m_pad, relu, valid_rows=None):
+                       m_out, m_pad, relu, valid_rows=None,
+                       zero_refs=None, group_size=None):
     """Fused Collector: dequant * BN-scale (one vector), bias, shortcut,
     ReLU, on-chip amax.  One implementation shared by both conv kernels,
     so sparse and dense conv outputs are bit-identical by construction.
@@ -80,6 +81,14 @@ def collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref, *,
     last strip of a tiled launch computes surplus rows from zero-padded
     input (sliced off by the caller) whose bias/ReLU values must not leak
     into the quantization scale.
+
+    ``zero_refs`` (opt-in sparsity profiling, DESIGN.md §11) is a
+    ``(zg_ref, za_ref)`` pair of per-cell output refs: the epilogue also
+    counts this strip-tile's zero elements per ``group_size``-channel
+    ``coarse_in`` group and its all-zero-group (row) cells — masked to
+    the same valid rows as the amax, so surplus strip rows never count.
+    Observation-only: ``y`` itself is untouched, so profiled and
+    unprofiled launches stay bit-identical (tested).
     """
     y = acc.astype(jnp.float32) * s_ref[...] + b_ref[...]
     if sc_ref is not None:
@@ -87,22 +96,36 @@ def collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref, *,
     if relu:
         y = jnp.maximum(y, 0.0)
     ay = jnp.abs(y)
-    if valid_rows is not None:
-        rows = jax.lax.broadcasted_iota(jnp.int32, ay.shape, 0)
+    rows = (None if valid_rows is None else
+            jax.lax.broadcasted_iota(jnp.int32, ay.shape, 0))
+    if rows is not None:
         ay = jnp.where(rows < valid_rows, ay, 0.0)
     amax_ref[0, 0, 0] = jnp.max(ay)
+    if zero_refs is not None:
+        zg_ref, za_ref = zero_refs
+        zm = y == 0.0
+        if rows is not None:
+            zm = zm & (rows < valid_rows)
+        z3 = zm.reshape(m_out, y.shape[1] // group_size, group_size)
+        zg_ref[0, 0, 0, :] = jnp.sum(z3, axis=(0, 2)).astype(jnp.float32)
+        za_ref[0, 0, 0, :] = jnp.sum(jnp.all(z3, axis=2),
+                                     axis=0).astype(jnp.float32)
     if m_pad > m_out:
         y = jnp.pad(y, ((0, m_pad - m_out), (0, 0)))
     out_ref[0] = y
 
 
 def _kernel(*refs, k, stride, strip_h, h_out, w_out, ms_pad, relu,
-            has_shortcut):
+            has_shortcut, profile_g):
+    n_in = 5 if has_shortcut else 4
+    ins, outs = refs[:n_in], refs[n_in:]
     if has_shortcut:
-        x_ref, w_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
+        x_ref, w_ref, s_ref, b_ref, sc_ref = ins
     else:
-        x_ref, w_ref, s_ref, b_ref, out_ref, amax_ref = refs
+        x_ref, w_ref, s_ref, b_ref = ins
         sc_ref = None
+    out_ref, amax_ref = outs[0], outs[1]
+    zero_refs = (outs[2], outs[3]) if profile_g else None
     x = x_ref[0]                                # (slab_h, Wp, C) int8, VMEM
     C = x.shape[-1]
     tap_weights = lambda tap, carry: (w_ref[tap * C:(tap + 1) * C, :], carry)
@@ -111,17 +134,20 @@ def _kernel(*refs, k, stride, strip_h, h_out, w_out, ms_pad, relu,
     valid = jnp.minimum(strip_h, h_out - pl.program_id(1) * strip_h) * w_out
     collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref,
                        m_out=strip_h * w_out, m_pad=ms_pad, relu=relu,
-                       valid_rows=valid)
+                       valid_rows=valid, zero_refs=zero_refs,
+                       group_size=profile_g)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "stride", "h_out", "w_out", "bn", "strip_h", "relu", "interpret"))
+    "k", "stride", "h_out", "w_out", "bn", "strip_h", "relu", "interpret",
+    "profile_g"))
 def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
                            eff_scale: jax.Array, eff_bias: jax.Array,
                            shortcut: jax.Array | None = None, *,
                            k: int, stride: int, h_out: int, w_out: int,
                            bn: int = 128, strip_h: int | None = None,
-                           relu: bool = True, interpret: bool = False):
+                           relu: bool = True, interpret: bool = False,
+                           profile_g: int | None = None):
     """Fused row-strip-tiled implicit-GEMM conv.
 
     x_pad:     (N, Hp, Wp, C) int8, SAME-padded (ref.pad_same_nhwc) and
@@ -136,9 +162,14 @@ def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
     shortcut:  optional (N, n_strips*ms_pad, n_out) f32, strip-blocked
                (each strip's strip_h*w_out rows padded to ms_pad)
     strip_h:   output rows per strip; None = one whole-image strip
-    Returns (y, amax): y f32 (N, n_strips*ms_pad, n_out) strip-blocked;
+    profile_g: opt-in sparsity profiling — coarse_in group size (must
+               divide bn); appends two per-(image, strip, channel-tile,
+               group) f32 zero-count outputs (elements / all-zero row
+               cells over valid rows) to the return, observation-only
+    Returns (y, amax): y f32 (N, n_strips*ms_pad, C_out) strip-blocked;
     amax f32 (N, n_strips, n_out/bn) per-(image, strip, channel-tile)
-    max|y| over valid rows for the int8 requantization pass.
+    max|y| over valid rows for the int8 requantization pass — or
+    (y, amax, zg, za) with ``profile_g``.
     """
     N, Hp, Wp, C = x_pad.shape
     KK, n_out = w_sp.shape
@@ -151,7 +182,8 @@ def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
     n_j = n_out // bn
     kern = functools.partial(_kernel, k=k, stride=stride, strip_h=g.strip_h,
                              h_out=h_out, w_out=w_out, ms_pad=g.ms_pad,
-                             relu=relu, has_shortcut=shortcut is not None)
+                             relu=relu, has_shortcut=shortcut is not None,
+                             profile_g=profile_g)
     in_specs = [
         # overlapping halo'd slabs: Unblocked = element-offset indexing
         pl.BlockSpec((1, g.slab_h, Wp, C),
@@ -169,15 +201,24 @@ def conv2d_implicit_pallas(x_pad: jax.Array, w_sp: jax.Array,
         in_specs.append(
             pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)))
         args.append(shortcut.astype(jnp.float32))
-    y, amax = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)),
+                 pl.BlockSpec((1, 1, 1), lambda n, s, j: (n, s, j))]
+    out_shape = [jax.ShapeDtypeStruct((N, g.n_strips * g.ms_pad, n_out),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((N, g.n_strips, n_j), jnp.float32)]
+    if profile_g:
+        assert bn % profile_g == 0, (bn, profile_g)
+        gpb = bn // profile_g
+        out_specs += [pl.BlockSpec((1, 1, 1, gpb),
+                                   lambda n, s, j: (n, s, j, 0))] * 2
+        out_shape += [jax.ShapeDtypeStruct((N, g.n_strips, n_j, gpb),
+                                           jnp.float32)] * 2
+    outs = pl.pallas_call(
         kern,
         grid=(N, g.n_strips, n_j),
         in_specs=in_specs,
-        out_specs=[pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)),
-                   pl.BlockSpec((1, 1, 1), lambda n, s, j: (n, s, j))],
-        out_shape=[jax.ShapeDtypeStruct((N, g.n_strips * g.ms_pad, n_out),
-                                        jnp.float32),
-                   jax.ShapeDtypeStruct((N, g.n_strips, n_j), jnp.float32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*args)
-    return y, amax
+    return tuple(outs)

@@ -46,12 +46,16 @@ from repro.kernels.tiling import strip_geometry
 
 
 def _kernel(*refs, k, stride, strip_h, h_out, w_out, ms_pad, relu,
-            has_shortcut, c_in, keep_k):
+            has_shortcut, c_in, keep_k, profile_g):
+    n_in = 6 if has_shortcut else 5
+    ins, outs = refs[:n_in], refs[n_in:]
     if has_shortcut:
-        x_ref, bm_ref, val_ref, s_ref, b_ref, sc_ref, out_ref, amax_ref = refs
+        x_ref, bm_ref, val_ref, s_ref, b_ref, sc_ref = ins
     else:
-        x_ref, bm_ref, val_ref, s_ref, b_ref, out_ref, amax_ref = refs
+        x_ref, bm_ref, val_ref, s_ref, b_ref = ins
         sc_ref = None
+    out_ref, amax_ref = outs[0], outs[1]
+    zero_refs = (outs[2], outs[3]) if profile_g else None
     x = x_ref[0]                                # (slab_h, Wp, C) int8, VMEM
     C = x.shape[-1]
     bn = out_ref.shape[2]
@@ -76,18 +80,21 @@ def _kernel(*refs, k, stride, strip_h, h_out, w_out, ms_pad, relu,
     valid = jnp.minimum(strip_h, h_out - pl.program_id(1) * strip_h) * w_out
     collector_epilogue(acc, s_ref, b_ref, sc_ref, out_ref, amax_ref,
                        m_out=strip_h * w_out, m_pad=ms_pad, relu=relu,
-                       valid_rows=valid)
+                       valid_rows=valid, zero_refs=zero_refs,
+                       group_size=profile_g)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "k", "stride", "h_out", "w_out", "bn", "strip_h", "relu", "interpret"))
+    "k", "stride", "h_out", "w_out", "bn", "strip_h", "relu", "interpret",
+    "profile_g"))
 def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
                          values: jax.Array, eff_scale: jax.Array,
                          eff_bias: jax.Array,
                          shortcut: jax.Array | None = None, *,
                          k: int, stride: int, h_out: int, w_out: int,
                          bn: int = 128, strip_h: int | None = None,
-                         relu: bool = True, interpret: bool = False):
+                         relu: bool = True, interpret: bool = False,
+                         profile_g: int | None = None):
     """Fused bitmap-native row-strip-tiled implicit-GEMM sparse conv.
 
     x_pad:     (N, Hp, Wp, C) int8, SAME-padded (ref.pad_same_nhwc) and
@@ -100,7 +107,10 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
                domain broadcasts one row); eff_bias (1, n_out) f32
     shortcut:  optional (N, n_strips*ms_pad, n_out) f32, strip-blocked
     strip_h:   output rows per strip; None = one whole-image strip
-    Returns (y, amax) exactly as conv2d_implicit_pallas.
+    profile_g: opt-in sparsity profiling group size (see
+               conv2d_implicit_pallas — identical outputs/semantics)
+    Returns (y, amax) exactly as conv2d_implicit_pallas
+    ((y, amax, zg, za) with ``profile_g``).
     """
     N, Hp, Wp, C = x_pad.shape
     Kb8, n_out = bitmap.shape
@@ -116,7 +126,7 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
     kern = functools.partial(_kernel, k=k, stride=stride, strip_h=g.strip_h,
                              h_out=h_out, w_out=w_out, ms_pad=g.ms_pad,
                              relu=relu, has_shortcut=shortcut is not None,
-                             c_in=C, keep_k=keep_k)
+                             c_in=C, keep_k=keep_k, profile_g=profile_g)
     in_specs = [
         # overlapping halo'd slabs: Unblocked = element-offset indexing
         pl.BlockSpec((1, g.slab_h, Wp, C),
@@ -135,15 +145,24 @@ def conv2d_sparse_pallas(x_pad: jax.Array, bitmap: jax.Array,
         in_specs.append(
             pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)))
         args.append(shortcut.astype(jnp.float32))
-    y, amax = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)),
+                 pl.BlockSpec((1, 1, 1), lambda n, s, j: (n, s, j))]
+    out_shape = [jax.ShapeDtypeStruct((N, g.n_strips * g.ms_pad, n_out),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((N, g.n_strips, n_j), jnp.float32)]
+    if profile_g:
+        assert bn % profile_g == 0, (bn, profile_g)
+        gpb = bn // profile_g
+        out_specs += [pl.BlockSpec((1, 1, 1, gpb),
+                                   lambda n, s, j: (n, s, j, 0))] * 2
+        out_shape += [jax.ShapeDtypeStruct((N, g.n_strips, n_j, gpb),
+                                           jnp.float32)] * 2
+    outs = pl.pallas_call(
         kern,
         grid=(N, g.n_strips, n_j),
         in_specs=in_specs,
-        out_specs=[pl.BlockSpec((1, g.ms_pad, bn), lambda n, s, j: (n, s, j)),
-                   pl.BlockSpec((1, 1, 1), lambda n, s, j: (n, s, j))],
-        out_shape=[jax.ShapeDtypeStruct((N, g.n_strips * g.ms_pad, n_out),
-                                        jnp.float32),
-                   jax.ShapeDtypeStruct((N, g.n_strips, n_j), jnp.float32)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*args)
-    return y, amax
+    return tuple(outs)

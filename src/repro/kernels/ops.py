@@ -179,7 +179,8 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
            x_scale, w_scale: jax.Array, gamma: jax.Array | None = None,
            beta: jax.Array | None = None, shortcut: jax.Array | None = None,
            relu: bool = True, quant_out: bool = False,
-           w_layout: str = "channel", strip_h: int | None = None):
+           w_layout: str = "channel", strip_h: int | None = None,
+           zero_count: int | None = None):
     """Fused row-strip-tiled implicit-GEMM int8 SAME conv + Collector.
 
     x_q:     (N, H, W, c_in) int8 activations; x_scale their scale —
@@ -209,6 +210,14 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
              strip whose VMEM working set fits the budget.  Tiled and
              untiled outputs are bit-identical; the jnp lowering only
              loops strips when strip_h is forced.
+    zero_count: opt-in activation-sparsity profiling (DESIGN.md §11) —
+             the coarse_in group size to count zeros at.  Appends the
+             profiler aux dict (kernels/ref.zero_counts_ref keys) to the
+             return: ``(y, zc)`` or ``(y_q, y_scale, zc)``.  jnp lowers
+             to the exact recount on ``y``; the Pallas kernels emit a
+             cheap per-strip zero-count output alongside the amax (host
+             recount fallback when channel padding misaligns the
+             groups).  Observation-only — y/y_q bits are unchanged.
 
     Lowering follows REPRO_PALLAS like every op here: the jnp reference on
     CPU, the Pallas implicit-GEMM kernel on TPU / in interpret mode.
@@ -233,6 +242,7 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     eff_scale = x_s.reshape(-1, 1) * col_scale.reshape(1, -1)
     eff_bias = (jnp.zeros((n_out,), jnp.float32) if beta is None
                 else beta.astype(jnp.float32))
+    profile_fast = False          # in-kernel zero counts (Pallas only)
     if mode == "jnp":
         # (R, 1, 1, n_out) broadcasts against NHWC accumulators in the
         # oracles' shared _collector, per-row and per-tensor alike
@@ -282,24 +292,34 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
             sc = _strip_blocked(
                 shortcut.astype(jnp.float32).reshape(N, m_out, n_out),
                 plan, n_pad)
+        # profiling rides the kernel launch (a per-strip zero-count
+        # output next to the amax) when the padded channel axis keeps
+        # coarse_in groups aligned; otherwise fall back to an exact
+        # host-side recount on y below (padded channels are all-zero and
+        # would inflate the counts)
+        profile_fast = (zero_count is not None and n_pad == n_out
+                        and n_out % zero_count == 0
+                        and bn % zero_count == 0)
         kw = dict(k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
                   strip_h=plan.strip_h, relu=relu,
-                  interpret=(mode == "interpret"))
+                  interpret=(mode == "interpret"),
+                  profile_g=zero_count if profile_fast else None)
         # the kernels index eff_scale per image (grid axis n) so per-row
         # domains ride the same launch; a per-tensor scalar broadcasts
         eff_rows = jnp.broadcast_to(eff_scale, (N, n_pad))
         if packed:
             from repro.kernels.conv_sparse import conv2d_sparse_pallas
-            y_flat, _amax = conv2d_sparse_pallas(
+            outs = conv2d_sparse_pallas(
                 xp, bitmap, values, eff_rows,
                 eff_bias.reshape(1, n_pad), sc, **kw)
         else:
             from repro.kernels.conv_implicit import conv2d_implicit_pallas
             if w_layout == "channel":  # pre-compile codes pay the permute
                 codes = ref.to_spatial_major(codes, k, C)
-            y_flat, _amax = conv2d_implicit_pallas(
+            outs = conv2d_implicit_pallas(
                 xp, codes, eff_rows,
                 eff_bias.reshape(1, n_pad), sc, **kw)
+        y_flat, _amax = outs[0], outs[1]
         y = y_flat.reshape(N, plan.n_strips, plan.ms_pad, n_pad)[
             :, :, :plan.ms, :n_out]
         y = y.reshape(N, plan.n_strips * plan.ms, n_out)[:, :m_out]
@@ -308,14 +328,32 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
         # tensor max, or max over strips/tiles only (keep N) per-row
         amax_of = (lambda: jnp.max(_amax, axis=(1, 2))) if per_row \
             else (lambda: jnp.max(_amax))
+    zc = None
+    if zero_count is not None:
+        if profile_fast:
+            # kernel outputs: (N, n_strips, n_j, groups/tile) valid-row
+            # zero counts; flatten (tile, in-tile group) -> the global
+            # channel-group axis and reduce on the right axes
+            m_out = y.shape[1] * y.shape[2]
+            zg = outs[2].reshape(N, -1, n_out // zero_count)
+            za = outs[3].reshape(N, -1, n_out // zero_count)
+            zc = {"row_zeros": jnp.sum(zg, axis=(1, 2)),
+                  "group_zeros": jnp.sum(zg, axis=(0, 1)),
+                  "group_allzero": jnp.sum(za, axis=(0, 1)),
+                  "elems_per_row": jnp.float32(m_out * n_out),
+                  "cells": jnp.float32(N * m_out)}
+        else:
+            zc = ref.zero_counts_ref(y, zero_count)
     if not quant_out:
-        return y
+        return (y, zc) if zero_count is not None else y
     # quantization-domain pass: activations go straight back to int8 so
     # the next conv consumes codes without an f32 HBM round-trip; under
     # per-row domains s_y is (N,) — one independent scale per image
     s_y = (jnp.maximum(amax_of(), 1e-12) / 127.0).astype(jnp.float32)
     s_b = s_y.reshape(-1, 1, 1, 1) if per_row else s_y
     y_q = jnp.clip(jnp.round(y / s_b), -127, 127).astype(jnp.int8)
+    if zero_count is not None:
+        return y_q, s_y, zc
     return y_q, s_y
 
 

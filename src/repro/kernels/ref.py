@@ -279,6 +279,32 @@ def _collector(acc: jax.Array, eff_scale: jax.Array, eff_bias: jax.Array,
     return jnp.maximum(y, 0.0) if relu else y
 
 
+def zero_counts_ref(y: jax.Array, group_size: int) -> dict:
+    """Exact activation zero counts of a conv output (the sparsity-
+    profiling oracle, observation-only — reads ``y``, changes nothing).
+
+    y (N, H, W, C) f32 post-Collector output; channels split into
+    C/group_size ``coarse_in`` lane groups (group i = channels
+    [i*g, (i+1)*g), matching the kernels' channel-tile flattening).
+    Returns the profiler aux dict (obs/sparsity.AUX_KEYS), all f32:
+    per-image zero counts, per-group zero counts, per-group all-zero
+    (image, pixel) cell counts, plus the static elems-per-row / cell
+    totals the fractions divide by.
+    """
+    N, H, W, C = y.shape
+    assert C % group_size == 0, (C, group_size)
+    zm = y == 0.0
+    z5 = zm.reshape(N, H, W, C // group_size, group_size)
+    return {
+        "row_zeros": jnp.sum(zm, axis=(1, 2, 3)).astype(jnp.float32),
+        "group_zeros": jnp.sum(z5, axis=(0, 1, 2, 4)).astype(jnp.float32),
+        "group_allzero": jnp.sum(jnp.all(z5, axis=4),
+                                 axis=(0, 1, 2)).astype(jnp.float32),
+        "elems_per_row": jnp.float32(H * W * C),
+        "cells": jnp.float32(N * H * W),
+    }
+
+
 def flash_attention_ref(q, k, v, causal=True, window=None):
     """Naive softmax attention oracle for the chunked/flash paths.
 

@@ -20,6 +20,13 @@ rebalanced.  Open loop (--open-loop FACTOR [--slo-rows N]): replay a
 Poisson arrival plan at FACTOR x the fleet's measured row capacity, with
 an optional p95 admission budget of N measured row-times — reports
 goodput, shed fraction, and p50/p95 (DESIGN.md §10).
+
+Telemetry (--trace out.json [--sparsity-groups G]): attach a
+``repro.obs.Telemetry`` to the fleet and save the whole serve — request
+admission/queue/dispatch/collect lifecycles, per-stage tick spans, idle
+and edge markers — as Chrome trace-event JSON, loadable directly at
+https://ui.perfetto.dev (DESIGN.md §11).  ``--sparsity-groups`` also
+profiles post-ReLU activation sparsity and prints the per-layer summary.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ import jax
 import numpy as np
 
 from repro.models import resnet
+from repro.obs import Telemetry
 from repro.serving.faults import Fault, FaultInjector
 from repro.serving.frontend import FrontendRequest, ResNetFrontend
 from repro.serving.loadgen import (offered_rows_per_s, poisson_plan,
@@ -64,7 +72,20 @@ def main(argv=None):
     ap.add_argument("--slo-rows", type=float, default=None, metavar="N",
                     help="p95 admission budget: N x measured per-row "
                          "time (open loop only; default: no shedding)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the serve as Chrome trace-event JSON "
+                         "(open in https://ui.perfetto.dev)")
+    ap.add_argument("--sparsity-groups", type=int, default=None,
+                    metavar="G",
+                    help="profile post-ReLU activation sparsity per "
+                         "G-channel coarse_in group (adds per-layer "
+                         "zero-count outputs to the conv kernels)")
     args = ap.parse_args(argv)
+
+    telemetry = None
+    if args.trace is not None or args.sparsity_groups is not None:
+        telemetry = Telemetry(trace=args.trace is not None,
+                              sparsity_groups=args.sparsity_groups)
 
     cfg = resnet.ResNetConfig(width_mult=args.width, num_classes=100,
                               in_hw=args.hw)
@@ -72,7 +93,8 @@ def main(argv=None):
     fe = ResNetFrontend(cfg, params, mode=args.mode,
                         sparsity=args.sparsity, n_replicas=args.replicas,
                         n_stages=args.stages, microbatch=args.microbatch,
-                        watchdog_ticks=args.watchdog_ticks)
+                        watchdog_ticks=args.watchdog_ticks,
+                        telemetry=telemetry)
     rng = np.random.RandomState(0)
 
     def wave():
@@ -153,6 +175,26 @@ def main(argv=None):
               f"{res['goodput_rows_s']:.1f} rows/s | p50 "
               f"{res['latency_p50_s'] * 1e3:.1f} ms | p95 "
               f"{res['latency_p95_s'] * 1e3:.1f} ms")
+
+    if telemetry is not None and telemetry.sparsity is not None:
+        snap = telemetry.sparsity.snapshot()
+        print(f"[sparsity] {snap['microbatches_profiled']} microbatches, "
+              f"{len(snap['layers'])} layers, overall post-ReLU zero "
+              f"fraction {snap['overall_zero_fraction']:.3f} "
+              f"(groups of {snap['groups']})")
+        worst = sorted(snap["layers"].items(),
+                       key=lambda kv: -kv[1]["zero_fraction"])[:3]
+        for name, lay in worst:
+            print(f"  {name}: zero {lay['zero_fraction']:.3f}, all-zero "
+                  f"{snap['groups']}-lane cells "
+                  f"{max(lay['group_allzero_cell_fraction']):.3f} (max "
+                  f"group)")
+    if args.trace is not None:
+        telemetry.trace.save(args.trace)
+        n = len(telemetry.trace.spans) + len(telemetry.trace.instants)
+        print(f"[trace] {n} events -> {args.trace} "
+              f"(validate: python -m repro.obs.trace {args.trace}; "
+              f"view: https://ui.perfetto.dev)")
     return fe
 
 

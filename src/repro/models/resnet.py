@@ -242,18 +242,70 @@ def _head_unit(p, carry):
     return apply_linear(p["w"], pooled, per_row=True)
 
 
-def compiled_units(params, cfg: ResNetConfig) -> list:
+def _stem_unit_profiled(g):
+    """Sparsity-profiled stem: same math, plus the post-ReLU zero-count
+    aux of the stem conv.  Profiled unit fns return ``(carry, aux)``;
+    the zero counts are observation-only so the carry is bit-identical
+    to the unprofiled unit's (tested)."""
+    def fn(p, x):
+        x_q, s = act_quant(x, per_row=True)
+        h, zc = _conv_q(p, x_q, s, relu=True, zero_count=g)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                  (1, 2, 2, 1), "SAME")
+        return act_quant(h, per_row=True), {"stem": zc}
+    return fn
+
+
+def _block_unit_profiled(name, g):
+    """Sparsity-profiled residual block: zero counts for the three
+    ReLU-output convs (a, b, and the post-shortcut c).  The projection
+    shortcut has no ReLU — its output isn't a post-ReLU sparsity
+    candidate — so it stays unprofiled."""
+    def fn(p, carry):
+        h_q, s_h = carry
+        sc = (_conv_q(p["sc"], h_q, s_h, relu=False) if "sc" in p
+              else h_q.astype(jnp.float32) * _row_scale(s_h))
+        a_q, s_a, zc_a = _conv_q(p["a"], h_q, s_h, quant_out=True,
+                                 zero_count=g)
+        b_q, s_b, zc_b = _conv_q(p["b"], a_q, s_a, quant_out=True,
+                                 zero_count=g)
+        h, zc_c = _conv_q(p["c"], b_q, s_b, shortcut=sc, relu=True,
+                          zero_count=g)
+        return act_quant(h, per_row=True), {f"{name}/a": zc_a,
+                                            f"{name}/b": zc_b,
+                                            f"{name}/c": zc_c}
+    return fn
+
+
+def _head_unit_profiled(p, carry):
+    return _head_unit(p, carry), {}    # no conv, nothing to profile
+
+
+def compiled_units(params, cfg: ResNetConfig,
+                   sparsity_groups: int | None = None) -> list:
     """The compiled forward as an ordered list of pipeline units: the stem
-    (conv + maxpool), each residual block, and the classifier head."""
-    units = [PipelineUnit("stem", 0, params["stem"], _stem_unit)]
+    (conv + maxpool), each residual block, and the classifier head.
+
+    ``sparsity_groups`` opts every ReLU-output conv into activation-
+    sparsity profiling at that coarse_in group size: unit fns then
+    return ``(carry, {layer: zero-count aux})`` instead of a bare carry
+    (obs/sparsity.py aggregates).  Carries are bit-identical either way.
+    """
+    g = sparsity_groups
+    units = [PipelineUnit("stem", 0, params["stem"],
+                          _stem_unit if g is None else _stem_unit_profiled(g))]
     bid = 1
     for i in range(4):
         name = cfg.stage(i)[0]
         for b, blk in enumerate(params[name]):
-            units.append(PipelineUnit(f"{name}_{b+1}", bid, blk,
-                                      _block_unit))
+            uname = f"{name}_{b+1}"
+            units.append(PipelineUnit(
+                uname, bid, blk,
+                _block_unit if g is None else _block_unit_profiled(uname, g)))
             bid += 1
-    units.append(PipelineUnit("head", -1, params["head"], _head_unit))
+    units.append(PipelineUnit(
+        "head", -1, params["head"],
+        _head_unit if g is None else _head_unit_profiled))
     return units
 
 

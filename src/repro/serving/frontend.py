@@ -81,6 +81,7 @@ import numpy as np
 from repro.core.compiled_linear import ensure_compiled
 from repro.launch.mesh import replica_pipeline_devices
 from repro.models import resnet
+from repro.obs.metrics import LIFE, MetricsRegistry, percentile
 from repro.serving.faults import ReplicaFailure
 from repro.serving.pipeline import PipelineEngine, PipelineRequest
 
@@ -92,6 +93,9 @@ class FrontendRequest(PipelineRequest):
     rows_routed: int = 0                # dispatch cursor (continuous mode)
     rejected: bool = False              # shed by SLO-aware admission
     t_submit: float | None = None
+    t_admitted: float | None = None     # admission decision made
+    t_first_dispatch: float | None = None
+    t_last_dispatch: float | None = None
     t_done: float | None = None
 
     @property
@@ -126,7 +130,9 @@ class Rejected:
 
 
 def _percentile(xs, q: float) -> float | None:
-    return float(np.percentile(np.asarray(xs), q)) if xs else None
+    """Kept as the frontend's percentile spelling; one implementation
+    (``obs.metrics.percentile``) serves the whole stack."""
+    return percentile(xs, q)
 
 
 class ResNetFrontend:
@@ -142,22 +148,30 @@ class ResNetFrontend:
                  watchdog_ticks: int | None = 8, recover: bool = True,
                  slo_p95_s: float | None = None,
                  latency_window: int = 2048,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, telemetry=None):
         assert n_replicas >= 1, n_replicas
         self.cfg = cfg
         self.microbatch = microbatch
         self.continuous = continuous
+        self.telemetry = telemetry
+        if telemetry is not None and telemetry.trace is not None:
+            # spans and SLO arithmetic must share one time axis: the
+            # trace's clock wins (Telemetry docstring) — callers with a
+            # fake clock pass it to Telemetry too
+            clock = telemetry.clock
+            telemetry.trace.name_process(0, "frontend")
         # compile ONCE; every replica shares this host-side tree and only
         # device_puts its own stages' subtrees onto its device group
         self.params = ensure_compiled(params, mode, sparsity)
         self._groups = replica_pipeline_devices(n_replicas, n_stages,
                                                 devices=devices)
         # kept so restart_replica can rebuild an engine identically
-        # (fresh device_put onto the same group, same shared host tree)
+        # (fresh device_put onto the same group, same shared host tree;
+        # telemetry rides along so a restarted replica keeps tracing)
         self._replica_kwargs = dict(
             mode=mode, sparsity=sparsity, n_stages=n_stages,
             stage_blocks=stage_blocks, plan=plan, microbatch=microbatch,
-            pack_requests=continuous)
+            pack_requests=continuous, telemetry=telemetry)
         self.replicas = [
             PipelineEngine(cfg, self.params, devices=self._groups[r],
                            replica=r, **self._replica_kwargs)
@@ -181,28 +195,97 @@ class ResNetFrontend:
         self._inflight: list = []
         self._live: dict = {}                  # rid -> live request
         self._door_rows = 0                    # rows waiting at the door
-        self.rows_dispatched = [0] * n_replicas
-        self.requests_dispatched = [0] * n_replicas
-        self.max_queue_depth = 0
+        # every wave/lifetime statistic lives in the registry: the
+        # wave/life scope split IS the reset_stats contract, testable
+        # structurally (registry.wave_names()); direct references keep
+        # the hot path at one attribute add per event, and the old
+        # attribute names survive as read-only property views below
+        self.metrics = m = MetricsRegistry()
+        self._rows_dispatched_c = [
+            m.counter(f"door.replica{r}.rows_dispatched")
+            for r in range(n_replicas)]
+        self._requests_dispatched_c = [
+            m.counter(f"door.replica{r}.requests_dispatched")
+            for r in range(n_replicas)]
+        self._max_queue_depth = m.highwater("door.max_queue_depth")
         # bounded reservoir: p50/p95 over the most recent latency_window
         # completions — an open-loop serve must not grow without bound
-        self._latencies: deque = deque(maxlen=latency_window)
-        self.requests_done = 0
+        self._latencies = m.reservoir("door.latency_s", latency_window)
+        self._requests_done = m.counter("door.requests_done")
         # failure / shed accounting
         self.failed = [False] * n_replicas
         self.failures: list = []               # {replica, reason, step}
-        self.replicas_failed = 0
-        self.requeues = 0                      # spans requeued
-        self.rows_requeued = 0
-        self.rejected_count = 0
-        self.rejected_rows = 0
-        self._steps = 0
+        self._replicas_failed = m.counter("door.replicas_failed")
+        self._requeues = m.counter("door.requeues")   # spans requeued
+        self._rows_requeued = m.counter("door.rows_requeued")
+        self._rejected = m.counter("door.rejected_requests")
+        self._rejected_rows = m.counter("door.rejected_rows")
+        self._steps_c = m.counter("door.steps")
         self._marker = [None] * n_replicas     # watchdog progress markers
         self._stall = [0] * n_replicas
         # EWMA per-row service time, measured fleet-wide from completions
-        # (calibration, not a wave stat: reset_stats keeps it)
-        self._row_time: float | None = None
-        self._rows_seen = 0
+        # (calibration, not a wave stat: LIFE scope survives reset_wave)
+        self._row_time_g = m.gauge("door.row_time_s", scope=LIFE,
+                                   initial=None)
+        self._rows_seen_g = m.gauge("door.rows_seen", scope=LIFE,
+                                    initial=0)
+
+    # -- registry views (the pre-registry attribute surface) -----------
+    @property
+    def rows_dispatched(self) -> list:
+        return [c.value for c in self._rows_dispatched_c]
+
+    @property
+    def requests_dispatched(self) -> list:
+        return [c.value for c in self._requests_dispatched_c]
+
+    @property
+    def max_queue_depth(self) -> int:
+        return int(self._max_queue_depth.value)
+
+    @property
+    def requests_done(self) -> int:
+        return self._requests_done.value
+
+    @property
+    def replicas_failed(self) -> int:
+        return self._replicas_failed.value
+
+    @property
+    def requeues(self) -> int:
+        return self._requeues.value
+
+    @property
+    def rows_requeued(self) -> int:
+        return self._rows_requeued.value
+
+    @property
+    def rejected_count(self) -> int:
+        return self._rejected.value
+
+    @property
+    def rejected_rows(self) -> int:
+        return self._rejected_rows.value
+
+    @property
+    def _steps(self) -> int:
+        return self._steps_c.value
+
+    @property
+    def _row_time(self):
+        return self._row_time_g.value
+
+    @_row_time.setter
+    def _row_time(self, v):                    # tests seed calibration
+        self._row_time_g.set(v)
+
+    @property
+    def _rows_seen(self):
+        return self._rows_seen_g.value
+
+    @_rows_seen.setter
+    def _rows_seen(self, v):
+        self._rows_seen_g.set(v)
 
     # -- request management --------------------------------------------
     def _validate(self, req) -> np.ndarray:
@@ -280,27 +363,36 @@ class ResNetFrontend:
         req.replica = None
         req.rows_submitted = req.rows_done = req.rows_routed = 0
         req.t_submit = self._clock()
+        req.t_admitted = req.t_first_dispatch = req.t_last_dispatch = None
         req.t_done = None
+        tr = (self.telemetry.trace if self.telemetry is not None else None)
         n_rows = len(req.images)
         est = self._estimate_wait_s(n_rows)
         if (self.slo_p95_s is not None and est is not None and n_rows
                 and est > self.slo_p95_s):
             req.rejected = True
-            self.rejected_count += 1
-            self.rejected_rows += n_rows
+            self._rejected.inc()
+            self._rejected_rows.inc(n_rows)
+            if tr is not None:
+                tr.instant("shed", "door", 0, req.rid, rid=req.rid,
+                           rows=n_rows, estimated_wait_s=est,
+                           slo_p95_s=self.slo_p95_s)
             return Rejected(rid=req.rid, rows=n_rows, estimated_wait_s=est,
                             slo_p95_s=self.slo_p95_s)
         self._live[req.rid] = req
+        req.t_admitted = self._clock()
         if n_rows == 0:
             # zero-row request: complete at the front door — it owns no
-            # microbatch slot, so don't make a replica tick for it
+            # microbatch slot, so don't make a replica tick for it; its
+            # queue/dispatch spans collapse to zero duration
+            req.t_first_dispatch = req.t_last_dispatch = req.t_admitted
             req.logits = np.zeros((0, self.cfg.num_classes), np.float32)
             req.done = True
             self._inflight.append(req)      # _collect stamps t_done
             return Admitted(rid=req.rid, rows=0, estimated_wait_s=est)
         self.queue.append(req)
         self._door_rows += n_rows
-        self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
+        self._max_queue_depth.observe(len(self.queue))
         return Admitted(rid=req.rid, rows=n_rows, estimated_wait_s=est)
 
     # -- routing ---------------------------------------------------------
@@ -332,12 +424,16 @@ class ResNetFrontend:
             r, room = self._best_replica()
             if r is None or room <= 0:
                 return                      # backpressure: hold the door
+            now = self._clock()
             if self._requeue:
                 req, start, stop = self._requeue[0]
                 take = min(room, stop - start)
                 self.replicas[r].submit_rows(req, start, start + take)
-                self.rows_dispatched[r] += take
+                self._rows_dispatched_c[r].inc(take)
                 self._door_rows -= take
+                if getattr(req, "t_first_dispatch", 0) is None:
+                    req.t_first_dispatch = now
+                req.t_last_dispatch = now
                 if start + take >= stop:
                     self._requeue.popleft()
                 else:
@@ -348,12 +444,14 @@ class ResNetFrontend:
                 take = min(room, len(req.images) - req.rows_routed)
                 if req.rows_routed == 0:    # first rows of this request
                     req.replica = r
-                    self.requests_dispatched[r] += 1
+                    req.t_first_dispatch = now
+                    self._requests_dispatched_c[r].inc()
                     self._inflight.append(req)
                 self.replicas[r].submit_rows(
                     req, req.rows_routed, req.rows_routed + take)
                 req.rows_routed += take
-                self.rows_dispatched[r] += take
+                req.t_last_dispatch = now
+                self._rows_dispatched_c[r].inc(take)
                 self._door_rows -= take
                 if req.rows_routed >= len(req.images):
                     self.queue.popleft()
@@ -362,9 +460,10 @@ class ResNetFrontend:
                 req.replica = r
                 self.replicas[r].submit(req)
                 req.rows_routed = len(req.images)
-                self.rows_dispatched[r] += len(req.images)
+                req.t_first_dispatch = req.t_last_dispatch = now
+                self._rows_dispatched_c[r].inc(len(req.images))
                 self._door_rows -= len(req.images)
-                self.requests_dispatched[r] += 1
+                self._requests_dispatched_c[r].inc()
                 self._inflight.append(req)
 
     def _scan_door_rows(self) -> int:
@@ -380,17 +479,21 @@ class ResNetFrontend:
         never-failed reference, so recovery is invisible in the logits
         (DESIGN.md §10)."""
         self.failed[r] = True
-        self.replicas_failed += 1
+        self._replicas_failed.inc()
         self.failures.append({"replica": r, "reason": reason,
                               "step": self._steps})
+        if (self.telemetry is not None
+                and self.telemetry.trace is not None):
+            self.telemetry.trace.instant("replica-failed", "door", 0, 0,
+                                         replica=r, reason=reason)
         if not self.recover:
             return
         spans = self.replicas[r].extract_pending()
         for req, start, stop in spans:
             self._requeue.append((req, start, stop))
-            self.rows_requeued += stop - start
+            self._rows_requeued.inc(stop - start)
             self._door_rows += stop - start
-        self.requeues += len(spans)
+        self._requeues.inc(len(spans))
 
     def _watch(self, r: int, eng):
         """Per-replica progress watchdog: an engine whose
@@ -421,7 +524,7 @@ class ResNetFrontend:
         Returns the new engine."""
         for req, start, stop in self.replicas[r].extract_pending():
             self._requeue.append((req, start, stop))
-            self.rows_requeued += stop - start
+            self._rows_requeued.inc(stop - start)
             self._door_rows += stop - start
         self.replicas[r] = PipelineEngine(
             self.cfg, self.params, devices=self._groups[r], replica=r,
@@ -459,17 +562,42 @@ class ResNetFrontend:
         only."""
         self._row_time = None
 
+    def _trace_request(self, tr, req):
+        """Emit the request's lifecycle as four contiguous spans on its
+        own pid-0 track (tid = rid): admission → queue → dispatch →
+        collect; the stage-tick spans it rode live on the replica pids.
+        Missing stamps (zero-row requests own no dispatch) collapse the
+        corresponding span to zero duration, keeping the chain complete
+        for every completed request."""
+        a = req.t_admitted if req.t_admitted is not None else req.t_submit
+        fd = (req.t_first_dispatch if req.t_first_dispatch is not None
+              else a)
+        ld = (req.t_last_dispatch if req.t_last_dispatch is not None
+              else fd)
+        rid, rows = req.rid, len(req.images)
+        tr.name_thread(0, rid, f"req {rid}")
+        tr.span("admission", "request", 0, rid, req.t_submit, a,
+                rid=rid, rows=rows)
+        tr.span("queue", "request", 0, rid, a, fd, rid=rid, rows=rows)
+        tr.span("dispatch", "request", 0, rid, fd, ld, rid=rid, rows=rows,
+                replica=req.replica)
+        tr.span("collect", "request", 0, rid, ld, req.t_done,
+                rid=rid, rows=rows)
+
     def _collect(self):
         done, still = [], []
         for req in self._inflight:
             (done if req.done else still).append(req)
         now = self._clock()
+        tr = (self.telemetry.trace if self.telemetry is not None else None)
         for req in done:
             req.t_done = now
             self._latencies.append(req.t_done - req.t_submit)
             self._live.pop(req.rid, None)
+            if tr is not None:
+                self._trace_request(tr, req)
         self._inflight = still                 # one linear pass per step
-        self.requests_done += len(done)
+        self._requests_done.inc(len(done))
         return done
 
     def step(self) -> bool:
@@ -478,7 +606,7 @@ class ResNetFrontend:
         completed requests.  Returns False once the whole fleet is idle.
         Raises RuntimeError when work is pending but every replica has
         failed — a dead fleet is diagnosable, not an infinite loop."""
-        self._steps += 1
+        self._steps_c.inc()
         t_start = self._clock()
         if not self._healthy() and (self.queue or self._requeue
                                     or self._inflight):
@@ -493,6 +621,9 @@ class ResNetFrontend:
         for r, eng in enumerate(self.replicas):
             if self.failed[r]:
                 continue
+            # host-dispatch-gap hint for bubble attribution: rows still
+            # held at the door when this replica ticks
+            eng.door_rows = self._door_rows
             try:
                 busy = eng.step() or busy
             except ReplicaFailure as e:
@@ -551,29 +682,30 @@ class ResNetFrontend:
 
     # -- accounting -----------------------------------------------------
     def reset_stats(self):
-        """Zero the lifecycle counters (latency samples, queue-depth
-        high-water mark, dispatch/failure/shed tallies, and each
-        replica's schedule tick/bubble/occupancy basis) without touching
-        the replicas' compiled state or health flags — benches call this
-        between measured waves, while idle.  The service-rate estimate
-        survives: it is calibration the admission controller needs from
+        """Zero the wave-scoped statistics (latency reservoir,
+        queue-depth high-water mark, dispatch/failure/shed tallies, and
+        each replica's schedule tick/bubble/occupancy basis) without
+        touching the replicas' compiled state or health flags — benches
+        call this between measured waves, while idle.  The reset is ONE
+        registry sweep: a statistic is wave-scoped iff ``reset_wave``
+        zeroes it, so the coverage audit is structural
+        (``metrics.wave_names()``; tested) instead of a hand-maintained
+        attribute list.  The service-rate estimate survives (LIFE
+        scope): it is calibration the admission controller needs from
         step one of the next wave, not a per-wave statistic."""
-        self._latencies.clear()
-        self.max_queue_depth = len(self.queue)
-        self.requests_done = 0
-        self.rows_dispatched = [0] * len(self.replicas)
-        self.requests_dispatched = [0] * len(self.replicas)
+        self.metrics.reset_wave()
+        self._max_queue_depth.observe(len(self.queue))
         self.failures = []
-        self.replicas_failed = 0
-        self.requeues = 0
-        self.rows_requeued = 0
-        self.rejected_count = 0
-        self.rejected_rows = 0
-        self._steps = 0
         for r, eng in enumerate(self.replicas):
             if not self.failed[r]:
                 eng.reset_counters()
         self._rows_seen = sum(eng.rows_completed for eng in self.replicas)
+
+    def snapshot(self) -> dict:
+        """The registries behind ``stats()``: the door's metrics plus
+        each replica engine's (engine + pipe share one registry)."""
+        return {"door": self.metrics.snapshot(),
+                "replicas": [eng.snapshot() for eng in self.replicas]}
 
     def stats(self) -> dict:
         reps = [eng.stats() for eng in self.replicas]

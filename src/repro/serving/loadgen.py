@@ -91,11 +91,20 @@ def run_open_loop(frontend, plan: list, *, max_wall_s: float | None = None,
     cannot drain the admitted work raises TimeoutError."""
     plan = sorted(plan, key=lambda a: a.t)
     admitted, rejected = [], []
+    tel = getattr(frontend, "telemetry", None)
+    tr = tel.trace if tel is not None else None
     t0 = clock()
     i = 0
     while True:
         now = clock() - t0
         while i < len(plan) and plan[i].t <= now:
+            if tr is not None:
+                # the arrival instant (the shed instant, if any, comes
+                # from submit itself)
+                tr.instant("arrival", "loadgen", 0, plan[i].req.rid,
+                           rid=plan[i].req.rid,
+                           rows=len(plan[i].req.images),
+                           planned_t_s=plan[i].t)
             out = frontend.submit(plan[i].req)
             (rejected if isinstance(out, Rejected)
              else admitted).append(plan[i].req)

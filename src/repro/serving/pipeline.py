@@ -38,6 +38,7 @@ from repro.core import partition
 from repro.core.compiled_linear import ensure_compiled
 from repro.distributed.conv_pipeline import ConvPipeline, PipelineStage
 from repro.models import resnet
+from repro.obs.metrics import LIFE, MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -70,11 +71,22 @@ class _RowSpan:
         return self.stop - self.cursor
 
 
-def _make_stage_fn(unit_fns):
-    def stage_fn(stage_params, carry):
-        for fn, p in zip(unit_fns, stage_params):
-            carry = fn(p, carry)
-        return carry
+def _make_stage_fn(unit_fns, profiled: bool = False):
+    if profiled:
+        # profiled units return (carry, aux); the stage program merges
+        # its units' aux dicts (layer names are globally unique) and the
+        # pipe feeds them to telemetry.sparsity — still one jit per stage
+        def stage_fn(stage_params, carry):
+            aux = {}
+            for fn, p in zip(unit_fns, stage_params):
+                carry, a = fn(p, carry)
+                aux.update(a)
+            return carry, aux
+    else:
+        def stage_fn(stage_params, carry):
+            for fn, p in zip(unit_fns, stage_params):
+                carry = fn(p, carry)
+            return carry
     return jax.jit(stage_fn)
 
 
@@ -97,6 +109,54 @@ def reference_logits(params, cfg, x, microbatch: int):
     return jnp.concatenate([fn(params, mb) for mb in mbs])
 
 
+def reference_profile(params, cfg, x, microbatch: int, groups: int,
+                      lowering: str | None = None):
+    """Single-device activation-sparsity oracle: run the PROFILED
+    compiled units over ``x`` at microbatch granularity and return
+    ``(logits, SparsityProfiler snapshot)``.
+
+    ``lowering`` temporarily pins ``REPRO_PALLAS`` (e.g. ``"jnp"`` for
+    the exact recount oracle the telemetry bench compares the serving
+    path's histograms against); the jitted chain is built fresh here, so
+    the pin takes effect for this call's tracing regardless of what the
+    process served with before.  ``params`` must already be compiled
+    (``ensure_compiled``)."""
+    import os
+    from repro.obs.sparsity import SparsityProfiler
+    prof = SparsityProfiler(groups=groups)
+    units = resnet.compiled_units(params, cfg, sparsity_groups=groups)
+    unit_fns = tuple(u.fn for u in units)
+    unit_ps = tuple(u.params for u in units)
+
+    def chain(ps, mb):
+        aux_all = {}
+        for f, p in zip(unit_fns, ps):
+            mb, aux = f(p, mb)
+            aux_all.update(aux)
+        return mb, aux_all
+
+    jfn = jax.jit(chain)
+    old = os.environ.get("REPRO_PALLAS")
+    if lowering is not None:
+        os.environ["REPRO_PALLAS"] = lowering
+    try:
+        outs = []
+        for i in range(0, x.shape[0], microbatch):
+            out, aux = jfn(unit_ps, jnp.asarray(x[i:i + microbatch],
+                                                jnp.float32))
+            prof.add(aux)
+            outs.append(np.asarray(out))
+    finally:
+        if lowering is not None:
+            if old is None:
+                os.environ.pop("REPRO_PALLAS", None)
+            else:
+                os.environ["REPRO_PALLAS"] = old
+    logits = (np.concatenate(outs) if outs
+              else np.zeros((0, cfg.num_classes), np.float32))
+    return logits, prof.snapshot()
+
+
 class PipelineEngine:
     """Persistent pipeline-parallel serving of the compiled ResNet."""
 
@@ -104,7 +164,7 @@ class PipelineEngine:
                  mode: str = "int8", sparsity: float = 0.8,
                  n_stages: int | None = None, stage_blocks=None, plan=None,
                  microbatch: int = 2, devices=None, replica: int = 0,
-                 pack_requests: bool = True):
+                 pack_requests: bool = True, telemetry=None):
         assert mode != "dense", "the pipeline serves the compiled network"
         self.cfg = cfg
         self.microbatch = microbatch
@@ -116,7 +176,25 @@ class PipelineEngine:
         # params: the boxed training tree (compiled here, like
         # ServingEngine) or an already-compiled unboxed tree
         self.params = ensure_compiled(params, mode, sparsity)
-        units = resnet.compiled_units(self.params, cfg)
+        self.telemetry = telemetry
+        # one registry per engine; the pipe shares it so engine+pipe
+        # export as one snapshot() surface
+        self.metrics = MetricsRegistry()
+        self._mb_injected = self.metrics.counter("engine.mb_injected")
+        self._rows_injected = self.metrics.counter("engine.rows_injected")
+        # lifetime odometer (LIFE scope: survives reset_counters, unlike
+        # the wave counters): rows delivered back to requests — the
+        # front door differences it to estimate fleet service rate, and
+        # the watchdog folds it into progress_marker
+        self._rows_completed = self.metrics.counter(
+            "engine.rows_completed", scope=LIFE)
+        # activation-sparsity profiling compiles DIFFERENT stage
+        # programs (units return (carry, aux)); off by default
+        groups = (telemetry.sparsity.groups
+                  if telemetry is not None and telemetry.profiled else None)
+        units = resnet.compiled_units(self.params, cfg,
+                                      sparsity_groups=groups)
+        self._profiled = groups is not None
         n_blocks = len(units) - 1              # head rides the last stage
         self.plan = self._resolve_plan(plan, stage_blocks, n_stages,
                                        n_blocks, devices)
@@ -124,7 +202,7 @@ class PipelineEngine:
         devices = self._resolve_devices(devices, len(self.plan))
         self.pipe = ConvPipeline(
             self._build_stages(units, self.stage_block_ids, devices),
-            replica=replica)
+            replica=replica, metrics=self.metrics, telemetry=telemetry)
         self.queue: list[_RowSpan] = []
         # incremental row accounting (kept exactly in sync with the span
         # queue; _scan_pending_rows is the O(queue) oracle tests assert
@@ -132,13 +210,14 @@ class PipelineEngine:
         # loop stays linear in admitted requests
         self._queued_rows = 0
         self._rows_in_flight = 0
-        self._mb_injected = 0
-        self._rows_injected = 0
-        # lifetime odometer (never reset, unlike the wave counters
-        # reset_counters zeroes): rows delivered back to requests — the
-        # front door differences it to estimate fleet service rate, and
-        # the watchdog folds it into progress_marker
-        self.rows_completed = 0
+        # host-dispatch-gap hint for bubble attribution: rows the FRONT
+        # DOOR holds undispatched (the frontend refreshes this every
+        # step; standalone engines leave it 0)
+        self.door_rows = 0
+
+    @property
+    def rows_completed(self) -> int:
+        return self._rows_completed.value
 
     # -- stage planning -------------------------------------------------
     def _resolve_plan(self, plan, stage_blocks, n_stages, n_blocks,
@@ -177,7 +256,8 @@ class PipelineEngine:
                 tuple(u.params for u in mine), devices[s])
             stages.append(PipelineStage(
                 index=s, device=devices[s],
-                fn=_make_stage_fn(tuple(u.fn for u in mine)),
+                fn=_make_stage_fn(tuple(u.fn for u in mine),
+                                  profiled=self._profiled),
                 params=stage_params,
                 unit_names=tuple(u.name for u in mine)))
         return stages
@@ -251,8 +331,9 @@ class PipelineEngine:
             return False
         if mb is not None:
             self._rows_in_flight += int(mb.shape[0])
-            self._mb_injected += 1
-            self._rows_injected += int(mb.shape[0])
+            self._mb_injected.inc()
+            self._rows_injected.inc(int(mb.shape[0]))
+        self.pipe.door_rows = self.door_rows
         for segs, out in self.pipe.tick(inject=mb, tag=tag):
             out = np.asarray(out)
             off = 0
@@ -266,7 +347,7 @@ class PipelineEngine:
                 off += n
             assert off == out.shape[0], (off, out.shape)
             self._rows_in_flight -= out.shape[0]
-            self.rows_completed += out.shape[0]
+            self._rows_completed.inc(int(out.shape[0]))
         return True
 
     def run(self, requests: list) -> list:
@@ -343,23 +424,30 @@ class PipelineEngine:
         return jnp.asarray(req.logits)
 
     def reset_counters(self):
-        """Zero the schedule + occupancy counters (idle only — delegates
-        the busy check to ConvPipeline.reset_counters)."""
+        """Zero the wave-scoped schedule + occupancy counters (idle only
+        — delegates the busy check to ConvPipeline.reset_counters); the
+        lifetime ``rows_completed`` odometer is LIFE-scoped and
+        survives."""
         self.pipe.reset_counters()
-        self._mb_injected = 0
-        self._rows_injected = 0
+        self.metrics.reset_wave()
+
+    def snapshot(self) -> dict:
+        """The registry behind ``stats()``: every engine + pipe metric
+        (the pipe shares this engine's registry) by name."""
+        return self.metrics.snapshot()
 
     def stats(self) -> dict:
         out = self.pipe.stats()
         out["microbatch"] = self.microbatch
         out["pack_requests"] = self.pack_requests
-        out["mb_injected"] = self._mb_injected
-        out["rows_injected"] = self._rows_injected
+        out["mb_injected"] = self._mb_injected.value
+        out["rows_injected"] = self._rows_injected.value
         # continuous batching's gate metric: mean fraction of microbatch
         # slots actually filled (1.0 = the pipe runs full)
         out["microbatch_occupancy"] = (
-            self._rows_injected / (self._mb_injected * self.microbatch)
-            if self._mb_injected else None)
+            self._rows_injected.value
+            / (self._mb_injected.value * self.microbatch)
+            if self._mb_injected.value else None)
         out["stage_blocks"] = [list(ids) for ids in self.stage_block_ids]
         out["planned_link_bytes"] = [p.link_bytes for p in self.plan[:-1]]
         return out

@@ -23,7 +23,9 @@ from repro import nn
 from repro.core import compiled_linear as cl
 from repro.launch.mesh import replica_pipeline_devices
 from repro.models import resnet
-from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.obs.metrics import Reservoir
+from repro.serving.frontend import (FrontendRequest, ResNetFrontend,
+                                    _percentile)
 from repro.serving.pipeline import reference_logits
 
 CFG = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
@@ -319,6 +321,69 @@ def test_resubmit_live_request_and_duplicate_rid_rejected(monkeypatch):
     other = FrontendRequest(rid=7, images=_images(1, seed=3))
     fe.run([other])
     assert other.done
+
+
+def test_percentile_edge_cases():
+    """The stack's one percentile implementation: None on empty (a fleet
+    that served nothing has no p95, not a p95 of 0), identity on a
+    single sample, exact interpolation between two."""
+    assert _percentile([], 50) is None
+    assert _percentile([], 95) is None
+    assert _percentile(iter(()), 99) is None       # any empty iterable
+    for q in (0, 50, 95, 100):
+        assert _percentile([0.25], q) == 0.25
+    assert _percentile([1.0, 3.0], 50) == 2.0
+    assert _percentile([1.0, 3.0], 0) == 1.0
+    assert _percentile([1.0, 3.0], 100) == 3.0
+    assert _percentile((3.0, 1.0, 2.0), 95) == pytest.approx(2.9)
+
+
+def test_latency_reservoir_edge_cases():
+    """The bounded latency store: empty -> no percentiles, window
+    exactly full keeps everything in arrival order, overflow evicts the
+    OLDEST sample first (sliding window, not a random reservoir)."""
+    r = Reservoir("lat", window=3)
+    assert len(r) == 0 and r.percentile(50) is None
+    assert r.snapshot()["p95"] is None and r.observed == 0
+    r.observe(5.0)                                 # single sample
+    assert r.percentile(50) == 5.0 == r.percentile(95)
+    r.append(1.0)                                  # deque-compatible alias
+    r.observe(3.0)                                 # window exactly full
+    assert len(r) == r.window == 3
+    assert r.values() == [5.0, 1.0, 3.0]           # arrival order kept
+    assert r.percentile(50) == 3.0
+    r.observe(2.0)                                 # overflow: 5.0 evicted
+    assert len(r) == 3 and r.observed == 4
+    assert r.values() == [1.0, 3.0, 2.0]
+    assert r.percentile(100) == 3.0                # max is of the window
+    with pytest.raises(AssertionError):
+        Reservoir("bad", window=0)
+
+
+def test_reset_stats_audit_is_structural(monkeypatch):
+    """Regression guard for the reset_stats surface: every wave-scoped
+    metric the door registers must zero on reset (checked from the
+    registry's own scope declarations, so a future counter added without
+    a scope decision fails HERE, not in a stale hand-kept list)."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    fe = ResNetFrontend(CFG, _compiled("int8"), mode="int8",
+                        n_replicas=2, microbatch=MB)
+    fe.run([FrontendRequest(rid=i, images=_images(2, seed=i))
+            for i in range(4)])
+    assert fe.metrics.wave_names(), "door must register wave metrics"
+    fe.reset_stats()
+    snap = fe.snapshot()["door"]
+    for name in fe.metrics.wave_names():
+        kind = fe.metrics.get(name).kind
+        if kind == "counter":
+            assert snap[name] == 0, name
+        elif kind == "reservoir":
+            assert snap[name]["count"] == 0, name
+        elif kind in ("gauge", "highwater"):
+            # queue depth is re-observed on the (drained) queue
+            assert snap[name] == 0, name
+    # the life side survives: the EWMA row time keeps its calibration
+    assert fe.stats()["est_row_time_s"] is not None
 
 
 def test_latency_window_bounds_samples(monkeypatch):
