@@ -1,0 +1,141 @@
+"""Model-zoo serving bench — every zoo member through the DAG-general
+compile path (DESIGN.md §12).
+
+Per model (resnet50 / mobilenet_v2 / repvgg_a0): wall-clock im/s through
+a 2-stage PipelineEngine *and* through the ResNetFrontend on top of it,
+each gated on bit-identity against the model's own ``reference_logits``;
+the int8 resident weight bytes vs the f32 dense parameter bytes (the
+constant-parameter compression story, now per-architecture); and for
+RepVGG the fused-vs-unfused dense forward speedup — the payoff of the
+compile-time branch fold (3x3 + 1x1 + identity collapse into one 3x3, so
+the fused graph runs one conv per block where the training graph ran
+three).  Results append to BENCH_models.json.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import nn
+from repro.core.compiled_linear import compile_params
+from repro.models import mobilenet_v2 as mb
+from repro.models import repvgg, resnet
+from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.pipeline import PipelineEngine, reference_logits
+
+N_STAGES = 2
+
+
+def _best_of(fn, iters=3):
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _f32_bytes(params) -> int:
+    return int(sum(np.asarray(v).size * 4
+                   for v in jax.tree.leaves(nn.unbox(params))))
+
+
+def _zoo(full: bool):
+    """(cfg, boxed servable params, extras) per model at bench scale."""
+    width, hw_r, hw_z, n_img, mbatch = ((0.25, 64, 64, 8, 2) if full
+                                        else (0.25, 32, 32, 4, 2))
+    if os.environ.get("REPRO_PALLAS") == "interpret" and not full:
+        # CI's kernel-tier smoke runs this bench in interpret mode
+        # (python-rate kernels): shrink so the trajectory stays populated
+        width, hw_r, hw_z, n_img, mbatch = 0.125, 8, 16, 2, 1
+    zoo = {}
+    r_cfg = resnet.ResNetConfig(width_mult=width, num_classes=10,
+                                in_hw=hw_r)
+    zoo["resnet50"] = (r_cfg, r_cfg.init(jax.random.PRNGKey(0)), {})
+    m_cfg = mb.MobileNetV2Config(width_mult=width, num_classes=10,
+                                 in_hw=hw_z)
+    zoo["mobilenet_v2"] = (m_cfg, m_cfg.init(jax.random.PRNGKey(0)), {})
+    v_cfg = repvgg.RepVGGConfig(width_mult=width, num_classes=10,
+                                in_hw=hw_z)
+    unfused = v_cfg.init(jax.random.PRNGKey(0))
+    zoo["repvgg_a0"] = (v_cfg, v_cfg.fuse(unfused), {"unfused": unfused})
+    return zoo, n_img, mbatch
+
+
+def run(full=False):
+    zoo, n_img, mbatch = _zoo(full)
+    out = {"config": dict(images=n_img, microbatch=mbatch,
+                          n_stages=N_STAGES)}
+    for name, (cfg, raw, extras) in zoo.items():
+        compiled = nn.unbox(compile_params(raw, mode="int8"))
+        x = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(1), (n_img, cfg.in_hw, cfg.in_hw, 3)))
+        ref = np.asarray(reference_logits(compiled, cfg,
+                                          jax.numpy.asarray(x), mbatch))
+
+        eng = PipelineEngine(cfg, compiled, mode="int8",
+                             n_stages=N_STAGES, microbatch=mbatch)
+        got = eng.run_batch(x)                 # warmup: compiles stages
+        np.testing.assert_array_equal(np.asarray(got), ref)
+        wall = _best_of(lambda: eng.run_batch(x), iters=2)
+        st = eng.stats()
+
+        fe = ResNetFrontend(cfg, compiled, mode="int8", n_replicas=1,
+                            n_stages=N_STAGES, microbatch=mbatch)
+        req = FrontendRequest(rid=0, images=x)
+        fe.run([req])
+        assert req.done
+        np.testing.assert_array_equal(np.asarray(req.logits), ref)
+        fe_wall = _best_of(lambda: fe.run(
+            [FrontendRequest(rid=0, images=x)]), iters=2)
+
+        int8_bytes = int(sum(st["stage_weight_bytes"]))
+        f32_bytes = _f32_bytes(raw)
+        row = {
+            "in_hw": cfg.in_hw,
+            "pipeline_im_s": n_img / wall,
+            "frontend_im_s": n_img / fe_wall,
+            "weight_bytes_int8": int8_bytes,
+            "weight_bytes_f32": f32_bytes,
+            "weight_ratio_f32_over_int8": f32_bytes / int8_bytes,
+            "n_conv_blocks": sum(len(b) for b in st["stage_blocks"]),
+            "planned_link_bytes": st["planned_link_bytes"],
+        }
+        if "unfused" in extras:
+            # fused-vs-unfused dense forward: the branch-fold payoff.
+            # Interleave the two measurements over fresh jit instances
+            # (best-of minima) so machine drift hits both alike — the
+            # same discipline pipeline_bench._stage_times and
+            # telemetry_bench use; a sequential pair measured here was
+            # 30% noisy when other bench sections' compile threads
+            # were still draining
+            xb = jax.numpy.asarray(x)
+            pf, pu = nn.unbox(raw), nn.unbox(extras["unfused"])
+            t_f = t_u = float("inf")
+            for _ in range(2):
+                fwd = jax.jit(lambda p, v: cfg.apply(p, v))
+                for p in (pf, pu):             # compile + warm both
+                    jax.block_until_ready(fwd(p, xb))
+                for _ in range(4):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fwd(pf, xb))
+                    t1 = time.perf_counter()
+                    jax.block_until_ready(fwd(pu, xb))
+                    t_f = min(t_f, t1 - t0)
+                    t_u = min(t_u, time.perf_counter() - t1)
+            row["fused_ms"] = t_f * 1e3
+            row["unfused_ms"] = t_u * 1e3
+            row["fused_speedup"] = t_u / t_f
+        out[name] = row
+        extra = (f" | fused {row['fused_speedup']:.2f}x vs 3-branch"
+                 if "fused_speedup" in row else "")
+        print(f" {name:13s} ({cfg.in_hw}x{cfg.in_hw}): pipeline "
+              f"{row['pipeline_im_s']:7.1f} im/s | frontend "
+              f"{row['frontend_im_s']:7.1f} im/s | weights f32/int8 "
+              f"{row['weight_ratio_f32_over_int8']:.2f}x{extra}; "
+              f"bit-identical to reference")
+    assert out["repvgg_a0"]["fused_speedup"] > 1.0, out["repvgg_a0"]
+    return out

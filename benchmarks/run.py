@@ -24,7 +24,7 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 OUT_DIR = ROOT / "experiments" / "bench"
 
 SMOKE_SECTIONS = ("table1_design_params", "conv", "sparse_conv",
-                  "pipeline", "frontend", "telemetry")
+                  "pipeline", "frontend", "telemetry", "models")
 
 # --report headline metric per trajectory (dotted path into `result`);
 # sections not listed fall back to the first numeric leaf found
@@ -35,6 +35,7 @@ HEADLINES = {
     "frontend": "open_loop.capacity_rows_s",
     "telemetry": "overhead_trace",
     "table1_design_params": "rows.conv2_x.mac_per_param",
+    "models": "repvgg_a0.fused_speedup",
 }
 
 
@@ -151,8 +152,8 @@ def main(argv=None) -> None:
         return
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     from benchmarks import fig7, frontend_bench, kernel_bench, \
-        pipeline_bench, roofline_table, serving_bench, table1, table2, \
-        telemetry_bench
+        models_bench, pipeline_bench, roofline_table, serving_bench, \
+        table1, table2, telemetry_bench
 
     sections = [("table1_design_params", table1.run),
                 ("table2_kernel_results", table2.run),
@@ -164,6 +165,7 @@ def main(argv=None) -> None:
                 ("pipeline", pipeline_bench.run),
                 ("frontend", frontend_bench.run),
                 ("telemetry", telemetry_bench.run),
+                ("models", models_bench.run),
                 ("serving_bench", serving_bench.run)]
     if args.smoke:
         sections = [s for s in sections if s[0] in SMOKE_SECTIONS]

@@ -1,0 +1,120 @@
+"""Model zoo through one serving stack: claim → projection → executed.
+
+The paper's compiled-CNN recipe (constant int8 parameters burned into
+the kernels, per-row quantized activation edges, pipeline partitioning
+at those edges) is model-agnostic: anything expressible as the conv DAG
+IR (models/graph.py) serves through the same PipelineEngine +
+ResNetFrontend unchanged.  This driver proves it on the whole zoo:
+
+  resnet50      — the paper's network (bottleneck residuals)
+  mobilenet_v2  — inverted residuals on the depthwise Pallas kernel,
+                  no-ReLU linear bottlenecks quantized via max|y|
+  repvgg_a0     — 3x3 + 1x1 + identity branches folded into ONE 3x3
+                  conv per block at compile time (train-time DAG,
+                  deploy-time chain)
+
+Per model: the analytic FPGA projection for the full-scale network
+(partition.solve_max_throughput — the Fig 7 discipline applied beyond
+ResNet), then a width-scaled instance executed through the replicated
+fleet frontend with the output gated bit-identical to the single-device
+compiled reference.
+
+Run:  PYTHONPATH=src python examples/serve_model_zoo.py \
+          [--width 0.25 --hw 32 --stages 2 --replicas 1 --mode int8]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core import partition
+from repro.core.compiled_linear import compile_params
+from repro.models import mobilenet_v2 as mb
+from repro.models import repvgg, resnet
+from repro.serving.frontend import FrontendRequest, ResNetFrontend
+from repro.serving.pipeline import reference_logits
+
+
+def _zoo(args):
+    """name -> (claim line, full-scale cfg, executable cfg + params)."""
+    w, hw = args.width, args.hw
+    r = resnet.ResNetConfig(width_mult=w, num_classes=100, in_hw=hw)
+    m = mb.MobileNetV2Config(width_mult=w, num_classes=100, in_hw=hw)
+    v = repvgg.RepVGGConfig(width_mult=w, num_classes=100, in_hw=hw)
+    vu = v.init(jax.random.PRNGKey(0))
+    return {
+        "resnet50": (
+            "the paper's network: bottleneck residuals, shortcut adds in "
+            "the Collector epilogue",
+            resnet.ResNetConfig(), r, r.init(jax.random.PRNGKey(0))),
+        "mobilenet_v2": (
+            "depthwise separable blocks on the tap-MAC Pallas kernel; "
+            "linear bottlenecks quantize via max|y| (no ReLU needed)",
+            mb.MobileNetV2Config(), m, m.init(jax.random.PRNGKey(0))),
+        "repvgg_a0": (
+            f"{sum(1 for _ in repvgg.block_specs(v))} three-branch train "
+            "blocks re-parameterized into single 3x3 convs at compile "
+            "time — the served chain never sees the 1x1/identity branches",
+            repvgg.RepVGGConfig(), v, v.fuse(vu)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=float, default=0.25)
+    ap.add_argument("--hw", type=int, default=32)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--mode", default="int8",
+                    choices=("int8", "cfmm", "sparse_cfmm"))
+    ap.add_argument("--images", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=2)
+    args = ap.parse_args()
+
+    for name, (claim, full_cfg, cfg, params) in _zoo(args).items():
+        print(f"\n=== {name} ===")
+        print(f" claim: {claim}")
+
+        blocks = full_cfg.graph().blocks()
+        proj = partition.solve_max_throughput(blocks)
+        print(f" projection (full scale, {len(blocks)} conv blocks, "
+              f"analytic FPGA model): {proj.im_s_per_chip:.0f} im/s/chip "
+              f"on {proj.n_chips} chip(s), max link "
+              f"{proj.max_link_gbps:.1f} Gbps")
+
+        compiled = nn.unbox(compile_params(params, mode=args.mode,
+                                           sparsity=0.8))
+        x = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.images, cfg.in_hw, cfg.in_hw, 3)))
+        ref = np.asarray(reference_logits(compiled, cfg, jnp.asarray(x),
+                                          args.microbatch))
+        fe = ResNetFrontend(cfg, compiled, mode=args.mode,
+                            n_replicas=args.replicas,
+                            n_stages=args.stages,
+                            microbatch=args.microbatch)
+        warm = FrontendRequest(rid=0, images=x)
+        fe.run([warm])                         # compiles every stage
+        np.testing.assert_array_equal(np.asarray(warm.logits), ref)
+        t0 = time.time()
+        req = FrontendRequest(rid=1, images=x)
+        fe.run([req])
+        wall = time.time() - t0
+        np.testing.assert_array_equal(np.asarray(req.logits), ref)
+        st = fe.replicas[0].stats()
+        n_blocks = sum(len(b) for b in st["stage_blocks"])
+        print(f" executed (width {args.width}, {cfg.in_hw}x{cfg.in_hw}, "
+              f"mode {args.mode}, {args.replicas} replica(s) x "
+              f"{args.stages} stage(s), {n_blocks} conv blocks): "
+              f"{args.images / wall:.1f} im/s, output bit-identical to "
+              f"the single-device compiled path; inter-stage links "
+              f"{st['planned_link_bytes']} B/img")
+
+    print("\nserve_model_zoo OK")
+
+
+if __name__ == "__main__":
+    main()

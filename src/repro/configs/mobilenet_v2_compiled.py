@@ -1,0 +1,5 @@
+"""MobileNetV2 Compiled CNN — depthwise model-zoo member
+(models/mobilenet_v2.py)."""
+from repro.models.mobilenet_v2 import MobileNetV2Config
+
+CONFIG = MobileNetV2Config(width_mult=1.0)

@@ -1,0 +1,5 @@
+"""RepVGG-A0 Compiled CNN — compile-time branch-fusion model-zoo member
+(models/repvgg.py; serve the ``fuse_params`` output)."""
+from repro.models.repvgg import RepVGGConfig
+
+CONFIG = RepVGGConfig(width_mult=1.0)

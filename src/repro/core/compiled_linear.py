@@ -80,14 +80,21 @@ class ConvGeom:
     A childless pytree node: it passes through nn.unbox / tree.map /
     eval_shape untouched, so compiled conv leaves stay self-describing —
     consumers never re-plumb filter size or stride alongside the weight.
+
+    ``dw=True`` marks a depthwise leaf (groups == channels): storage is
+    tap-major ``(k*k, C)`` and ``apply_conv`` routes it to the depthwise
+    tap-MAC kernel (kernels/conv_depthwise.py) instead of implicit-GEMM;
+    ``c_in`` is 1 (per-output-channel input fan-in), which also makes the
+    analytic ``ConvLayerSpec`` MAC/param counts come out right.
     """
 
     k: int
     stride: int
     c_in: int
+    dw: bool = False
 
     def tree_flatten(self):
-        return (), (self.k, self.stride, self.c_in)
+        return (), (self.k, self.stride, self.c_in, self.dw)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -186,6 +193,8 @@ def packed_codes(w: dict) -> jax.Array:
     order every other consumer speaks.  NOT on the serving hot path —
     ``apply_conv`` hands the stored bytes straight to the kernel."""
     geom = w.get("geom")
+    if geom is not None and geom.dw:   # depthwise leaf: tap-major (k*k, C)
+        return w["values"]             # storage IS the canonical layout
     if "bitmap" in w:
         dense = bitmap_unpack(w["bitmap"], w["values"])
         if geom is not None:           # conv leaf: spatial-major, K padded
@@ -285,6 +294,12 @@ def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
     """
     geom = w["geom"]
     from repro.kernels import ops
+    if geom.dw:                        # depthwise: tap-MAC kernel
+        return ops.conv2d_dw(x_q, w["values"], geom.k, geom.stride,
+                             x_scale=x_scale, w_scale=w["scale"],
+                             gamma=gamma, beta=beta, shortcut=shortcut,
+                             relu=relu, quant_out=quant_out,
+                             zero_count=zero_count)
     if "bitmap" in w:                  # sparse_cfmm: packed weights only
         codes = (w["bitmap"], w["values"])
     else:
@@ -302,6 +317,21 @@ def apply_conv(w: dict, x_q: jax.Array, x_scale, *, gamma=None, beta=None,
 def _compile_leaf(p: nn.Param, mode: str, sparsity: float):
     w = p.value.astype(jnp.float32)
     lead, in_ax, out_ax = p.axes[:-2], p.axes[-2], p.axes[-1]
+    dw = nn.dwconv_geom_of(p.kind)
+    if dw is not None:
+        # Depthwise leaves store dense tap-major int8 values in EVERY
+        # serve mode: K = k*k (9 for the 3x3 mobilenet case), so a bitmap
+        # or LUT re-encoding of 9 rows saves nothing and would only add a
+        # per-tap decode to the VPU inner loop — the weight-bytes win of
+        # sparse_cfmm lives in the pointwise convs that dominate
+        # mobilenet's parameters, and those pack normally.
+        assert w.ndim == 2, f"stacked depthwise leaves unsupported: {w.shape}"
+        k, stride = dw
+        assert w.shape[0] == k * k, (w.shape, p.kind)
+        qt = quantize_int7(w, axis=-1)             # per-channel scale
+        return {"values": nn.Param(qt.values, (in_ax, out_ax)),
+                "scale": nn.Param(qt.scale.reshape(1, -1), (None, out_ax)),
+                "geom": ConvGeom(k, stride, 1, dw=True)}
     geom = nn.conv_geom_of(p.kind)
     conv_k = geom[0] if geom is not None else None
     fn = lambda wi: _compile_leaf_2d(wi, mode, sparsity, conv_k)

@@ -74,9 +74,10 @@ class PartitionResult:
                               for c in self.chips],
         )
 
-    def stage_plans(self, blocks: list, n_stages: int | None = None) -> list:
+    def stage_plans(self, blocks: list, n_stages: int | None = None,
+                    edge_bytes: list | None = None) -> list:
         """Executable ``StagePlan``s for this partition (see stage_plans)."""
-        return stage_plans(self, blocks, n_stages)
+        return stage_plans(self, blocks, n_stages, edge_bytes)
 
 
 def partition(blocks: list[list[ConvLayerSpec]], target_im_s: float,
@@ -207,11 +208,15 @@ class StagePlan:
 
 
 def edge_bytes_after_block(blocks: list, j: int) -> int:
-    """int8 activation bytes per image leaving block ``j``.
+    """int8 activation bytes per image leaving block ``j`` — the ResNet
+    convention: block 0 is a stem whose executable unit max-pools 2x2
+    after its conv, so the stem edge carries a quarter of conv1's map.
 
-    The analytic specs record each conv's *own* output map; the executable
-    stem unit additionally max-pools 2x2 before handing off (ResNet's
-    stride-2 pool), so the stem edge carries a quarter of conv1's map.
+    DAG-general models don't follow that convention; the planner entry
+    points below accept an explicit per-block ``edge_bytes`` list
+    (``models.graph.Graph.edge_bytes`` computes it from the graph's real
+    cut-edge shapes) and fall back to this legacy accounting when given
+    none — for ResNet the two agree exactly (tested).
     """
     spec = blocks[j][-1]
     if j == 0:
@@ -245,12 +250,14 @@ def split_stages(costs: list, n_stages: int) -> list:
 
 
 def _plans_from_groups(blocks: list, groups: list,
-                       alms_per_block: list | None = None) -> list:
+                       alms_per_block: list | None = None,
+                       edge_bytes: list | None = None) -> list:
     plans = []
     for s, ids in enumerate(groups):
         names = tuple(l.name for j in ids for l in blocks[j])
-        link = 0 if s == len(groups) - 1 else \
-            edge_bytes_after_block(blocks, ids[-1])
+        link = 0 if s == len(groups) - 1 else (
+            edge_bytes[ids[-1]] if edge_bytes is not None
+            else edge_bytes_after_block(blocks, ids[-1]))
         macs = int(sum(l.macs for j in ids for l in blocks[j]))
         alms = (sum(alms_per_block[j] for j in ids)
                 if alms_per_block is not None else 0.0)
@@ -258,26 +265,30 @@ def _plans_from_groups(blocks: list, groups: list,
     return plans
 
 
-def plan_stages(blocks: list, n_stages: int) -> list:
+def plan_stages(blocks: list, n_stages: int,
+                edge_bytes: list | None = None) -> list:
     """MAC-balanced contiguous ``StagePlan``s along block boundaries —
     the explicit-stage-map path (no FPGA cost model involved)."""
     groups = split_stages([sum(l.macs for l in blk) for blk in blocks],
                           n_stages)
-    return _plans_from_groups(blocks, groups)
+    return _plans_from_groups(blocks, groups, edge_bytes=edge_bytes)
 
 
-def explicit_stage_plans(blocks: list, groups: list) -> list:
+def explicit_stage_plans(blocks: list, groups: list,
+                         edge_bytes: list | None = None) -> list:
     """``StagePlan``s from an explicit stage map (tuple of block-id tuples
     — must be a contiguous in-order partition of the block list)."""
     flat = [j for g in groups for j in g]
     assert flat == list(range(len(blocks))), (
         "stage map must cover blocks 0..%d contiguously" % (len(blocks) - 1),
         groups)
-    return _plans_from_groups(blocks, [tuple(g) for g in groups])
+    return _plans_from_groups(blocks, [tuple(g) for g in groups],
+                              edge_bytes=edge_bytes)
 
 
 def stage_plans(result: PartitionResult, blocks: list,
-                n_stages: int | None = None) -> list:
+                n_stages: int | None = None,
+                edge_bytes: list | None = None) -> list:
     """Executable stages from a Fig 7 chip packing.
 
     Chip boundaries are re-aligned to block boundaries (a block whose
@@ -287,13 +298,33 @@ def stage_plans(result: PartitionResult, blocks: list,
     grouping is re-balanced by per-block ALMs into that many contiguous
     stages (serving fewer devices than Fig 7 chips).
     """
-    chip_of_layer = {}
+    chip_of_layer, layer_order = {}, []
+    alms_of_layer = {}
     for chip in result.chips:
         for p in chip.layers:
-            chip_of_layer.setdefault(p["layer"], chip.index)
+            if p["layer"] not in chip_of_layer:
+                chip_of_layer[p["layer"]] = chip.index
+                layer_order.append(p["layer"])
+            alms_of_layer[p["layer"]] = (alms_of_layer.get(p["layer"], 0.0)
+                                         + p["alms"])
+    if not all(l.name in chip_of_layer for blk in blocks for l in blk):
+        # the result was solved over a structurally-equal block list with
+        # different layer names (e.g. a Fig 7 packing of the legacy
+        # ResNet-convention specs applied to graph-derived blocks):
+        # re-key it positionally — same chain, so the i-th layer of the
+        # solve is the i-th layer here
+        flat = [l.name for blk in blocks for l in blk]
+        if len(flat) != len(layer_order):
+            raise ValueError(
+                f"partition result covers {len(layer_order)} layers but "
+                f"the block list holds {len(flat)}; layer names don't "
+                "match and positional alignment is impossible")
+        chip_of_layer = {new: chip_of_layer[old]
+                         for new, old in zip(flat, layer_order)}
+        alms_of_layer = {new: alms_of_layer[old]
+                         for new, old in zip(flat, layer_order)}
     block_chip = [chip_of_layer[blk[0].name] for blk in blocks]
-    alms_per_block = [sum(p["alms"] for c in result.chips for p in c.layers
-                          if p["layer"] in {l.name for l in blk})
+    alms_per_block = [sum(alms_of_layer.get(l.name, 0.0) for l in blk)
                       for blk in blocks]
     if n_stages is not None:
         groups = split_stages(alms_per_block, n_stages)
@@ -305,7 +336,7 @@ def stage_plans(result: PartitionResult, blocks: list,
                 cur = []
             cur.append(j)
         groups.append(tuple(cur))
-    return _plans_from_groups(blocks, groups, alms_per_block)
+    return _plans_from_groups(blocks, groups, alms_per_block, edge_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -357,6 +357,114 @@ def conv2d(x_q: jax.Array, codes: jax.Array, k: int, stride: int, *,
     return y_q, s_y
 
 
+def conv2d_dw(x_q: jax.Array, values: jax.Array, k: int, stride: int, *,
+              x_scale, w_scale: jax.Array, gamma: jax.Array | None = None,
+              beta: jax.Array | None = None,
+              shortcut: jax.Array | None = None, relu: bool = True,
+              quant_out: bool = False, strip_h: int | None = None,
+              zero_count: int | None = None):
+    """Fused row-strip-tiled depthwise int8 SAME conv + Collector.
+
+    The depthwise sibling of ``conv2d`` (same Collector semantics, same
+    quantization-domain contract: per-row ``x_scale`` propagates to a
+    per-row ``y_scale`` under ``quant_out``).  ``values`` is the
+    compile-time tap-major ``(k*k, C)`` int8 weight — one weight row per
+    receptive-field tap — consumed by the VPU tap-MAC kernel
+    (kernels/conv_depthwise.py); implicit-GEMM would burn a (C, C)
+    matmul per tap for a diagonal's worth of useful work.  jnp lowering
+    and Pallas kernel are bit-identical across strip tilings (the jnp
+    path loops strips only when ``strip_h`` is forced, like ``conv2d``).
+    """
+    mode = _mode()
+    N, H, W, C = x_q.shape
+    assert values.shape == (k * k, C), (values.shape, k, C)
+    one = jnp.ones((C,), jnp.float32)
+    x_s = jnp.asarray(x_scale, jnp.float32)
+    per_row = x_s.ndim >= 1          # (N,) per-row domains vs scalar
+    col_scale = (w_scale.reshape(-1).astype(jnp.float32)
+                 * (one if gamma is None else gamma.astype(jnp.float32)))
+    eff_scale = x_s.reshape(-1, 1) * col_scale.reshape(1, -1)
+    eff_bias = (jnp.zeros((C,), jnp.float32) if beta is None
+                else beta.astype(jnp.float32))
+    profile_fast = False
+    if mode == "jnp":
+        eff4 = eff_scale.reshape(eff_scale.shape[0], 1, 1, C)
+        if strip_h is not None:
+            y = ref.conv2d_dw_collector_strips_ref(
+                x_q, values, k, stride, strip_h, eff4, eff_bias,
+                shortcut, relu)
+        else:
+            y = ref.conv2d_dw_collector_ref(x_q, values, k, stride, eff4,
+                                            eff_bias, shortcut, relu)
+        amax_of = (lambda: jnp.max(jnp.abs(y), axis=(1, 2, 3))) if per_row \
+            else (lambda: jnp.max(jnp.abs(y)))
+    else:
+        xp, h_out, w_out = ref.pad_same_nhwc(x_q, k, stride)
+        m_out = h_out * w_out
+        bn, n_pad = _tile_pad(C, 128)
+        if n_pad > C:              # awkward channel count: zero-pad + slice
+            # zero input channels x zero weight channels -> zero outputs,
+            # exact under int8 MACs; the pad is sliced off below
+            xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, n_pad - C)))
+            values = jnp.pad(values, ((0, 0), (0, n_pad - C)))
+            eff_scale = jnp.pad(eff_scale, ((0, 0), (0, n_pad - C)))
+            eff_bias = jnp.pad(eff_bias, (0, n_pad - C))
+        # the slab is channel-tiled (bn channels per cell), so the
+        # planner's activation term scales with bn, not C
+        plan = tiling.plan_strips(k=k, stride=stride, h_out=h_out,
+                                  w_out=w_out, wp=xp.shape[2], c_in=bn,
+                                  bn=bn, weight_bytes=k * k * bn,
+                                  has_shortcut=shortcut is not None,
+                                  strip_h=strip_h)
+        if xp.shape[1] < plan.x_rows:  # zero rows for the last strip's slab
+            xp = jnp.pad(xp, ((0, 0), (0, plan.x_rows - xp.shape[1]),
+                              (0, 0), (0, 0)))
+        sc = None
+        if shortcut is not None:
+            sc = _strip_blocked(
+                shortcut.astype(jnp.float32).reshape(N, m_out, C),
+                plan, n_pad)
+        profile_fast = (zero_count is not None and n_pad == C
+                        and C % zero_count == 0
+                        and bn % zero_count == 0)
+        eff_rows = jnp.broadcast_to(eff_scale, (N, n_pad))
+        from repro.kernels.conv_depthwise import conv2d_dw_pallas
+        outs = conv2d_dw_pallas(
+            xp, values, eff_rows, eff_bias.reshape(1, n_pad), sc,
+            k=k, stride=stride, h_out=h_out, w_out=w_out, bn=bn,
+            strip_h=plan.strip_h, relu=relu,
+            interpret=(mode == "interpret"),
+            profile_g=zero_count if profile_fast else None)
+        y_flat, _amax = outs[0], outs[1]
+        y = y_flat.reshape(N, plan.n_strips, plan.ms_pad, n_pad)[
+            :, :, :plan.ms, :C]
+        y = y.reshape(N, plan.n_strips * plan.ms, C)[:, :m_out]
+        y = y.reshape(N, h_out, w_out, C)
+        amax_of = (lambda: jnp.max(_amax, axis=(1, 2))) if per_row \
+            else (lambda: jnp.max(_amax))
+    zc = None
+    if zero_count is not None:
+        if profile_fast:
+            m_out = y.shape[1] * y.shape[2]
+            zg = outs[2].reshape(N, -1, C // zero_count)
+            za = outs[3].reshape(N, -1, C // zero_count)
+            zc = {"row_zeros": jnp.sum(zg, axis=(1, 2)),
+                  "group_zeros": jnp.sum(zg, axis=(0, 1)),
+                  "group_allzero": jnp.sum(za, axis=(0, 1)),
+                  "elems_per_row": jnp.float32(m_out * C),
+                  "cells": jnp.float32(N * m_out)}
+        else:
+            zc = ref.zero_counts_ref(y, zero_count)
+    if not quant_out:
+        return (y, zc) if zero_count is not None else y
+    s_y = (jnp.maximum(amax_of(), 1e-12) / 127.0).astype(jnp.float32)
+    s_b = s_y.reshape(-1, 1, 1, 1) if per_row else s_y
+    y_q = jnp.clip(jnp.round(y / s_b), -127, 127).astype(jnp.int8)
+    if zero_count is not None:
+        return y_q, s_y, zc
+    return y_q, s_y
+
+
 def flash_attention(q, k, v, causal=True, window=None):
     """GQA-native flash attention: Pallas on TPU, jnp chunked elsewhere.
 

@@ -261,6 +261,71 @@ def conv2d_collector_strips_ref(x_q: jax.Array, codes, k: int, stride: int,
     return jnp.concatenate(strips, axis=1)
 
 
+def _dw_taps(xp: jax.Array, w_tap: jax.Array, k: int, stride: int,
+             h_out: int, w_out: int) -> jax.Array:
+    """Tap-loop depthwise int8 conv on a padded slab -> int32 NHWC.
+
+    xp: (N, Hp, Wp, C) int8; w_tap: (k*k, C) int8 tap-major — each tap
+    contributes an elementwise (per-channel) MAC instead of the dense
+    conv's cross-channel matmul, which is exactly why implicit-GEMM
+    degenerates at groups == C and depthwise gets its own kernel.
+    """
+    C = w_tap.shape[-1]
+    acc = jnp.zeros((xp.shape[0], h_out, w_out, C), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            sl = _shift_slice(xp, dy, dx, h_out, w_out, stride)
+            acc = acc + (sl.astype(jnp.int32)
+                         * w_tap[dy * k + dx].astype(jnp.int32))
+    return acc
+
+
+def conv2d_dw_int8_ref(x_q: jax.Array, w_tap: jax.Array, k: int,
+                       stride: int) -> jax.Array:
+    """Depthwise int8 NHWC SAME conv -> int32 (exact)."""
+    assert x_q.shape[-1] == w_tap.shape[-1], (x_q.shape, w_tap.shape)
+    xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
+    return _dw_taps(xp, w_tap, k, stride, h_out, w_out)
+
+
+def conv2d_dw_collector_ref(x_q: jax.Array, w_tap: jax.Array, k: int,
+                            stride: int, eff_scale: jax.Array,
+                            eff_bias: jax.Array, shortcut=None,
+                            relu: bool = True) -> jax.Array:
+    """Fused depthwise conv + Collector oracle (same epilogue maths as the
+    dense conv — shared ``_collector``, so the two kernel families are
+    bit-identical in their Non-Kernel stage by construction)."""
+    acc = conv2d_dw_int8_ref(x_q, w_tap, k, stride)
+    return _collector(acc, eff_scale, eff_bias, shortcut, relu)
+
+
+def conv2d_dw_collector_strips_ref(x_q: jax.Array, w_tap: jax.Array,
+                                   k: int, stride: int, strip_h: int,
+                                   eff_scale: jax.Array,
+                                   eff_bias: jax.Array, shortcut=None,
+                                   relu: bool = True) -> jax.Array:
+    """Row-strip-tiled jnp lowering of the fused depthwise conv: loops the
+    exact halo'd slabs the Pallas grid iterates — bit-identical to the
+    untiled oracle by construction (same input rows, same tap order)."""
+    from repro.kernels.tiling import strip_geometry
+    xp, h_out, w_out = pad_same_nhwc(x_q, k, stride)
+    g = strip_geometry(k=k, stride=stride, h_out=h_out, w_out=w_out,
+                       strip_h=strip_h)
+    if xp.shape[1] < g.x_rows:                     # zero rows: exact int8
+        xp = jnp.pad(xp, ((0, 0), (0, g.x_rows - xp.shape[1]),
+                          (0, 0), (0, 0)))
+    strips = []
+    for s in range(g.n_strips):
+        rows = min(g.strip_h, h_out - s * g.strip_h)
+        slab = jax.lax.slice_in_dim(xp, s * g.row_step,
+                                    s * g.row_step + g.slab_h, axis=1)
+        acc = _dw_taps(slab, w_tap, k, stride, rows, w_out)
+        sc = (None if shortcut is None
+              else shortcut[:, s * g.strip_h:s * g.strip_h + rows])
+        strips.append(_collector(acc, eff_scale, eff_bias, sc, relu))
+    return jnp.concatenate(strips, axis=1)
+
+
 def conv2d_sparse_collector_ref(x_q: jax.Array, bitmap: jax.Array,
                                 values: jax.Array, k: int, stride: int,
                                 eff_scale: jax.Array, eff_bias: jax.Array,

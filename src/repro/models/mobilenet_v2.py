@@ -1,0 +1,194 @@
+"""MobileNetV2 — inverted residuals + depthwise convs as a Compiled NN.
+
+The second model-zoo member (DESIGN.md §12).  Two structural features
+exercise paths ResNet50 never touches:
+
+* **depthwise 3x3 convs** (groups == channels) compile to the tap-MAC
+  kernel (kernels/conv_depthwise.py) via the ``dwconv`` Param kind —
+  implicit-GEMM would waste c_in x multiplies on a diagonal matmul;
+* **linear bottlenecks**: the projection conv has NO ReLU but still emits
+  a quantized edge.  The Collector epilogue's amax is max|y| (signed
+  symmetric int8), so ``relu=False, quant_out=True`` needs no new kernel
+  code — the existing epilogue covers it.
+
+Block structure (t = expansion, per Table 2 of the MobileNetV2 paper):
+expand 1x1 (skipped when t == 1) → depthwise 3x3 (stride) → project 1x1
+(linear), with the identity shortcut riding the project conv's Collector
+whenever stride == 1 and c_in == c_out.  Deviation from the paper's
+training recipe: plain ReLU instead of ReLU6 — the clamp exists to aid
+low-precision TRAINING, while this repo compiles post-training params
+and the activation quantizer already bounds the range (DESIGN.md §12).
+
+Graph cuts: residual blocks are one pipeline unit (the block input stays
+live for the shortcut, so no interior edge is an articulation cut);
+non-residual blocks split at their expand/dw/project edges into finer
+units — legal cuts, finer stage-planning granularity for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+from repro.models.graph import Graph, Node, apply_graph
+from repro.models.resnet import _conv_apply, _conv_init
+
+__all__ = ["MOBILENET_V2_BLOCKS", "MobileNetV2Config", "block_specs",
+           "init", "apply", "mobilenet_v2_graph"]
+
+# (expansion t, out channels c, repeats n, first stride s) — Table 2.
+MOBILENET_V2_BLOCKS = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def _ch(c: int, w: float) -> int:
+    """Width-scaled channel count, floored to the int8 tile-friendly
+    multiple of 8 the kernels want."""
+    return max(8, (int(c * w) // 8) * 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class MobileNetV2Config:
+    width_mult: float = 1.0
+    num_classes: int = 1000
+    in_hw: int = 224
+
+    def graph(self) -> Graph:
+        return mobilenet_v2_graph(self)
+
+    def init(self, key):
+        return init(key, self)
+
+    def apply(self, params, x):
+        return apply(params, x, self)
+
+
+def block_specs(cfg: MobileNetV2Config) -> list:
+    """Flattened per-block (t, c_in, c_mid, c_out, stride) chain."""
+    out = []
+    in_ch = _ch(32, cfg.width_mult)
+    for t, c, n, s in MOBILENET_V2_BLOCKS:
+        for i in range(n):
+            c_out = _ch(c, cfg.width_mult)
+            out.append((t, in_ch, t * in_ch, c_out, s if i == 0 else 1))
+            in_ch = c_out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Functional model
+# ---------------------------------------------------------------------------
+
+def _dw_init(key, c, k, stride):
+    return {
+        "w": nn.dwconv_param(key, c, k, stride, ("conv_in", "conv_out")),
+        "scale": nn.param(key, (c,), ("conv_out",), init="ones"),
+        "bias": nn.param(key, (c,), ("conv_out",), init="zeros"),
+    }
+
+
+def _dw_apply(p, x, k, stride, relu=True):
+    """Dense-path depthwise conv: grouped XLA conv over the tap-major
+    (k*k, C) weight + separate NK collector ops — the float reference the
+    compiled tap-MAC kernel path is validated against."""
+    w = p["w"].value if isinstance(p["w"], nn.Param) else p["w"]
+    c = x.shape[-1]
+    y = jax.lax.conv_general_dilated(
+        x, w.reshape(k, k, 1, c), (stride, stride), "SAME",
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y * p["scale"] + p["bias"]
+    return jax.nn.relu(y) if relu else y
+
+
+def init(key, cfg: MobileNetV2Config):
+    keys = iter(jax.random.split(key, 4 + 3 * len(block_specs(cfg))))
+    params = {"stem": _conv_init(next(keys), 3, _ch(32, cfg.width_mult), 3,
+                                 stride=2)}
+    blocks = []
+    for t, c_in, c_mid, c_out, stride in block_specs(cfg):
+        blk = {}
+        if t != 1:
+            blk["ex"] = _conv_init(next(keys), c_in, c_mid, 1)
+        blk["dw"] = _dw_init(next(keys), c_mid, 3, stride)
+        blk["pj"] = _conv_init(next(keys), c_mid, c_out, 1)
+        blocks.append(blk)
+    params["blocks"] = blocks
+    tail_ch = _ch(1280, cfg.width_mult)
+    params["tail"] = _conv_init(next(keys), block_specs(cfg)[-1][3],
+                                tail_ch, 1)
+    params["head"] = {"w": nn.linear_param(next(keys), tail_ch,
+                                           cfg.num_classes,
+                                           ("embed", "classes"))}
+    return params
+
+
+def mobilenet_v2_graph(cfg: MobileNetV2Config) -> Graph:
+    """MobileNetV2 as a conv-DAG: stem 3x3/s2, inverted-residual blocks
+    (expand → depthwise → linear project, the identity shortcut riding the
+    project conv's epilogue), the 1x1 tail conv, and the pooled head.
+    Every conv emits a quantized edge (``quant_out``), including the
+    no-ReLU projections — symmetric int8 needs only max|y|."""
+    nodes = [
+        Node("image", "input"),
+        Node("stem_in", "quant", ("image",), unit="stem"),
+        Node("stem", "conv", ("stem_in",), path=("stem",), k=3, stride=2,
+             c_in=3, c_out=_ch(32, cfg.width_mult), quant_out=True),
+    ]
+    prev = "stem"
+    for j, (t, c_in, c_mid, c_out, stride) in enumerate(block_specs(cfg)):
+        u = f"block{j+1}"
+        residual = stride == 1 and c_in == c_out
+        src = prev
+        if t != 1:
+            nodes.append(Node(f"{u}/ex", "conv", (prev,),
+                              path=("blocks", j, "ex"), k=1, c_in=c_in,
+                              c_out=c_mid, quant_out=True, unit=u))
+            src = f"{u}/ex"
+        nodes.append(Node(f"{u}/dw", "dwconv", (src,),
+                          path=("blocks", j, "dw"), k=3, stride=stride,
+                          c_in=c_mid, c_out=c_mid, quant_out=True, unit=u))
+        sc = None
+        if residual:
+            sc = f"{u}/id"
+            nodes.append(Node(sc, "dequant", (prev,), unit=u))
+        nodes.append(Node(f"{u}/pj", "conv", (f"{u}/dw",),
+                          path=("blocks", j, "pj"), k=1, c_in=c_mid,
+                          c_out=c_out, relu=False, quant_out=True,
+                          shortcut=sc, unit=u))
+        prev = f"{u}/pj"
+    nodes.append(Node("tail", "conv", (prev,), path=("tail",), k=1,
+                      c_in=block_specs(cfg)[-1][3],
+                      c_out=_ch(1280, cfg.width_mult), quant_out=True,
+                      unit="tail"))
+    nodes.append(Node("head", "head", ("tail",), path=("head",)))
+    return Graph("mobilenet_v2", tuple(nodes), cfg.in_hw, 3,
+                 cfg.num_classes)
+
+
+def apply(params, x, cfg: MobileNetV2Config):
+    """x: (B, H, W, 3) -> logits.  Compiled constant params run the graph
+    path; dense (unboxed float) params run the XLA reference."""
+    if isinstance(params["stem"]["w"], dict):      # compiled constant params
+        return apply_graph(mobilenet_v2_graph(cfg), params, x)
+    h = _conv_apply(params["stem"], x, 3, stride=2)
+    for p, (t, c_in, c_mid, c_out, stride) in zip(params["blocks"],
+                                                  block_specs(cfg)):
+        h0 = h
+        y = _conv_apply(p["ex"], h, 1) if "ex" in p else h
+        y = _dw_apply(p["dw"], y, 3, stride)
+        y = _conv_apply(p["pj"], y, 1, relu=False)
+        h = y + h0 if (stride == 1 and c_in == c_out) else y
+    h = _conv_apply(params["tail"], h, 1)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return apply_linear(params["head"]["w"], pooled)

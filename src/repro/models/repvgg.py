@@ -1,0 +1,194 @@
+"""RepVGG — structural re-parameterization as compile-time branch fusion.
+
+The third model-zoo member (DESIGN.md §12).  Training-time RepVGG blocks
+have three parallel branches — a 3x3 conv, a 1x1 conv, and (when
+stride == 1 and c_in == c_out) an identity — each with its own folded-BN
+per-channel scale/bias.  Because convolution is linear, the three fold
+into ONE 3x3 conv ahead of time:
+
+    Wf = W3·g3 + embed(W1·g1) + embed(I·gid),   bf = b3 + b1 + bid
+
+where ``embed`` places a 1x1 weight on the 3x3 kernel's center tap.  In
+the channel-major flat layout (c_in*k*k, c_out) the center-tap rows are
+exactly ``4::9`` (tap dy*3+dx = 4 within each input channel's 9 rows), so
+the fold is two ``at[4::9].add`` updates — no layout shuffles.
+
+``fuse_params`` is the natural extension of this repo's thesis: the
+paper freezes parameters into the bitstream at compile time, so ANY
+parameter-only algebra is free at serve time.  The fused network is a
+plain sequential chain of 3x3 convs — every edge is an articulation cut,
+giving the pipeline planner maximum granularity — and it is validated
+against the unfused three-branch reference (tests/test_graph.py).
+
+Stride-2 subtlety: with SAME padding (pad_lo = total//2 = 0 for k=1) a
+TRUE strided 1x1 conv samples even pixels while the 3x3 center tap sits
+at odd offsets, so "1x1 branch == center-embedded 3x3" holds exactly only
+at stride 1.  RepVGG's published fusion (and ours) therefore DEFINES the
+1x1 branch as the center-embedded 3x3 conv; the unfused reference applies
+it the same way, and a stride-1 test pins embed == true 1x1 where the
+identity does hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.compiled_linear import apply_linear
+from repro.models.graph import Graph, Node, apply_graph
+from repro.models.resnet import _conv_apply, _conv_init
+
+__all__ = ["REPVGG_A0_STAGES", "RepVGGConfig", "block_specs", "init",
+           "fuse_params", "apply", "repvgg_graph", "embed_1x1"]
+
+# (out channels, blocks) per stage — RepVGG-A0; the first block of every
+# stage has stride 2 (input stage included: 224 -> 112 at the stem block).
+REPVGG_A0_STAGES = [(48, 1), (48, 2), (96, 4), (192, 14), (1280, 1)]
+
+
+def _ch(c: int, w: float) -> int:
+    return max(8, int(c * w))
+
+
+@dataclasses.dataclass(frozen=True)
+class RepVGGConfig:
+    width_mult: float = 1.0
+    num_classes: int = 1000
+    in_hw: int = 224
+
+    def graph(self) -> Graph:
+        return repvgg_graph(self)
+
+    def init(self, key):
+        return init(key, self)
+
+    def fuse(self, params):
+        return fuse_params(params, self)
+
+    def apply(self, params, x):
+        return apply(params, x, self)
+
+
+def block_specs(cfg: RepVGGConfig) -> list:
+    """Flattened per-block (name, c_in, c_out, stride, identity) chain."""
+    out, in_ch = [], 3
+    for i, (c, n) in enumerate(REPVGG_A0_STAGES):
+        c_out = _ch(c, cfg.width_mult)
+        for b in range(n):
+            stride = 2 if b == 0 else 1
+            ident = stride == 1 and in_ch == c_out
+            out.append((f"stage{i+1}_{b+1}", in_ch, c_out, stride, ident))
+            in_ch = c_out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Functional model (unfused training-time form)
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: RepVGGConfig):
+    """Unfused three-branch params: blocks[j] = {conv3, conv1[, id]}."""
+    specs = block_specs(cfg)
+    keys = iter(jax.random.split(key, 2 + 4 * len(specs)))
+    blocks = []
+    for name, c_in, c_out, stride, ident in specs:
+        blk = {"conv3": _conv_init(next(keys), c_in, c_out, 3, stride=stride),
+               "conv1": _conv_init(next(keys), c_in, c_out, 1, stride=stride)}
+        if ident:
+            blk["id"] = {
+                "scale": nn.param(next(keys), (c_out,), ("conv_out",),
+                                  init="ones"),
+                "bias": nn.param(next(keys), (c_out,), ("conv_out",),
+                                 init="zeros"),
+            }
+        blocks.append(blk)
+    return {"blocks": blocks,
+            "head": {"w": nn.linear_param(next(keys), specs[-1][2],
+                                          cfg.num_classes,
+                                          ("embed", "classes"))}}
+
+
+def embed_1x1(w1, c_in, k=3):
+    """Embed a 1x1 conv weight (c_in, c_out) on the center tap of a kxk
+    conv in the channel-major flat layout: rows c*k*k + center."""
+    kk, center = k * k, (k * k) // 2
+    wf = jnp.zeros((c_in * kk, w1.shape[1]), w1.dtype)
+    return wf.at[center::kk].add(w1)
+
+
+def _val(p):
+    return p.value if isinstance(p, nn.Param) else p
+
+
+def fuse_params(params, cfg: RepVGGConfig):
+    """Compile-time branch fusion: fold the 3x3/1x1/identity branches and
+    their per-channel scales into ONE 3x3 conv per block (scale = 1,
+    bias = sum of branch biases).  Returns a boxed Param tree ready for
+    ``compile_params`` — parameter-only algebra, free under the paper's
+    constant-parameter regime."""
+    fused = []
+    for blk, (name, c_in, c_out, stride, ident) in zip(params["blocks"],
+                                                       block_specs(cfg)):
+        w3, g3 = _val(blk["conv3"]["w"]), _val(blk["conv3"]["scale"])
+        w1, g1 = _val(blk["conv1"]["w"]), _val(blk["conv1"]["scale"])
+        wf = w3 * g3 + embed_1x1(w1 * g1, c_in)
+        bf = _val(blk["conv3"]["bias"]) + _val(blk["conv1"]["bias"])
+        if ident:
+            gid = _val(blk["id"]["scale"])
+            wf = wf.at[4::9].add(jnp.diag(gid.astype(wf.dtype)))
+            bf = bf + _val(blk["id"]["bias"])
+        fused.append({
+            "w": nn.Param(wf, ("conv_in", "conv_out"),
+                          kind=nn.conv_kind(3, stride)),
+            "scale": nn.Param(jnp.ones((c_out,), wf.dtype), ("conv_out",)),
+            "bias": nn.Param(bf, ("conv_out",)),
+        })
+    return {"blocks": fused, "head": params["head"]}
+
+
+def repvgg_graph(cfg: RepVGGConfig) -> Graph:
+    """The FUSED network as a conv-DAG: a pure sequential chain of 3x3
+    quant-out convs — every block edge is an articulation cut, so the
+    pipeline planner gets per-block granularity."""
+    specs = block_specs(cfg)
+    nodes = [Node("image", "input"),
+             Node("in_q", "quant", ("image",), unit=specs[0][0])]
+    prev = "in_q"
+    for j, (name, c_in, c_out, stride, _) in enumerate(specs):
+        nodes.append(Node(name, "conv", (prev,), path=("blocks", j), k=3,
+                          stride=stride, c_in=c_in, c_out=c_out,
+                          quant_out=True, unit=name))
+        prev = name
+    nodes.append(Node("head", "head", (prev,), path=("head",)))
+    return Graph("repvgg_a0", tuple(nodes), cfg.in_hw, 3, cfg.num_classes)
+
+
+def apply(params, x, cfg: RepVGGConfig):
+    """x: (B, H, W, 3) -> logits.
+
+    Dispatch: compiled fused params run the graph path; dense fused params
+    run a plain 3x3 chain; dense UNFUSED params run the three-branch
+    reference (the pre-fusion baseline ``fuse_params`` is tested against).
+    """
+    blk0 = params["blocks"][0]
+    if "conv3" not in blk0 and isinstance(blk0["w"], dict):
+        return apply_graph(repvgg_graph(cfg), params, x)     # compiled fused
+    h = x
+    for p, (name, c_in, c_out, stride, ident) in zip(params["blocks"],
+                                                     block_specs(cfg)):
+        if "conv3" in p:                                     # unfused
+            y = _conv_apply(p["conv3"], h, 3, stride, relu=False)
+            # the 1x1 branch is DEFINED as its center-tap 3x3 embedding
+            # (see module docstring: strided SAME sampling differs)
+            w1 = {"w": embed_1x1(_val(p["conv1"]["w"]), c_in),
+                  "scale": p["conv1"]["scale"], "bias": p["conv1"]["bias"]}
+            y = y + _conv_apply(w1, h, 3, stride, relu=False)
+            if ident:
+                y = y + (h * p["id"]["scale"] + p["id"]["bias"])
+            h = jax.nn.relu(y)
+        else:                                                # fused dense
+            h = _conv_apply(p, h, 3, stride)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return apply_linear(params["head"]["w"], pooled)

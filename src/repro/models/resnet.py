@@ -11,30 +11,26 @@ Two forward paths (DESIGN.md §4):
 * **dense** (training / pre-refactor baseline): im2col patches through
   ``apply_linear`` with separate XLA Collector ops — kept verbatim as the
   reference the compiled path is validated against.
-* **compiled**: weights are constant int8 codes stored in the kernels'
-  spatial-major tap layout and carrying their (k, stride, c_in) geometry;
-  each conv is ONE fused row-strip-tiled implicit-GEMM launch
+* **compiled**: the model is a conv-DAG over quantization-domain edges
+  (models/graph.py, DESIGN.md §12).  ``resnet_graph`` builds the graph —
+  stem conv + maxpool, bottleneck blocks whose shortcut rides the last
+  conv's Collector epilogue, classifier head — and ``graph.compile_graph``
+  cuts it at articulation edges into pipeline units, each a pure function
+  of its own param subtree with producer-side quantization, so every unit
+  edge is an ``(int8, scale[row])`` pair and the pipeline-parallel engine
+  (serving/pipeline.py) slices the unit list into per-device stages
+  bit-identically (DESIGN.md §7).  Weights are constant int8 codes in the
+  kernels' spatial-major tap layout carrying their (k, stride, c_in)
+  geometry; each conv is ONE fused row-strip-tiled implicit-GEMM launch
   (``compiled_linear.apply_conv``) with the whole Collector in the
-  epilogue — the strip planner (kernels/tiling.py) bounds per-cell VMEM
-  so the path scales past ResNet50 geometry (the 224x224 stem tiles;
-  7x7 conv5_x maps stay a single strip) — and residual blocks run a
-  quantization-domain pass: one ``act_quant`` per block, then
-  activations stay int8 between the a/b/c convs instead of per-conv f32
-  requant round-trips.  The compiled forward is factored into
-  ``compiled_units`` — stem / residual blocks / head, each a pure
-  function of its own param subtree with producer-side quantization, so
-  every unit edge is an ``(int8, scale)`` pair and the pipeline-parallel
-  engine (serving/pipeline.py) slices the unit list into per-device
-  stages bit-identically (DESIGN.md §7) — the replicated front-end
-  (serving/frontend.py, DESIGN.md §8) reuses the same units unchanged:
-  replication happens at the engine layer, never in the model.  In
-  ``sparse_cfmm`` mode the weight leaves are bitmap-packed and the same
-  seam dispatches to the bitmap-native sparse conv kernel
+  epilogue.  In ``sparse_cfmm`` mode the weight leaves are bitmap-packed
+  and the same seam dispatches to the bitmap-native sparse conv kernel
   (``kernels/conv_sparse.py``) — this file needs no sparse-specific code;
   the leaf's storage keys select the dataflow.
 
 Inference-focused (the paper compiles post-training parameters); a width
-multiplier supports reduced smoke configs.
+multiplier supports reduced smoke configs, and the bottleneck
+``expansion`` is a config field (Table I's networks all use 4).
 """
 from __future__ import annotations
 
@@ -44,8 +40,15 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
-from repro.core.compiled_linear import act_quant, apply_conv, apply_linear
+from repro.core.compiled_linear import apply_conv, apply_linear
 from repro.core.fpga_model import ConvLayerSpec
+from repro.models.graph import Graph, Node, PipelineUnit, compile_graph
+
+__all__ = [
+    "RESNET50_STAGES", "ResNetConfig", "table1", "conv_blocks_for",
+    "resnet50_conv_blocks", "init", "apply", "resnet_graph",
+    "compiled_units", "PipelineUnit",
+]
 
 # (blocks, mid_channels, out_channels, feature hw) per stage — Table I.
 RESNET50_STAGES = [
@@ -61,17 +64,47 @@ class ResNetConfig:
     width_mult: float = 1.0
     num_classes: int = 1000
     in_hw: int = 224
+    expansion: int = 4          # bottleneck out/mid ratio (Table I: 4)
+
+    def __post_init__(self):
+        if self.expansion < 1:
+            raise ValueError(
+                f"expansion must be a positive integer, got {self.expansion}")
 
     def stage(self, i):
-        name, blocks, mid, out, hw = RESNET50_STAGES[i]
+        name, blocks, mid, _, hw = RESNET50_STAGES[i]
         w = self.width_mult
-        return name, blocks, max(8, int(mid * w)), max(8, int(out * w)), hw
+        return (name, blocks, max(8, int(mid * w)),
+                max(8, int(mid * self.expansion * w)), hw)
+
+    # The serving stack (pipeline engine, frontend, partition planner)
+    # drives any model through this trio — see mobilenet_v2.py/repvgg.py
+    # for the other zoo members.
+    def graph(self) -> Graph:
+        return resnet_graph(self)
+
+    def init(self, key):
+        return init(key, self)
+
+    def apply(self, params, x):
+        return apply(params, x, self)
 
 
-def table1() -> dict:
-    """Reproduce Table I exactly from the architecture definition."""
+def table1(expansion: int = 4) -> dict:
+    """Reproduce Table I exactly from the architecture definition.
+
+    Table I's per-stage parameter algebra (in·mid + 9·mid² + mid·out with
+    in = out = expansion·mid) is only valid when the bottleneck expansion
+    matches the stage table's channel counts — anything else raises
+    rather than silently reporting wrong MAC/param counts.
+    """
     rows = {}
     for name, _, mid, out, hw in RESNET50_STAGES:
+        if out != expansion * mid:
+            raise ValueError(
+                f"table1: stage {name} has out={out} but expansion*mid = "
+                f"{expansion}*{mid} = {expansion * mid}; Table I's "
+                "param/MAC algebra assumes out == expansion*mid")
         in_ch = out  # mid-stage block input = stage output channels
         params = in_ch * mid + mid * mid * 9 + mid * out
         macs = params * hw * hw
@@ -186,127 +219,73 @@ def init(key, cfg: ResNetConfig):
     return params
 
 
-@dataclasses.dataclass(frozen=True)
-class PipelineUnit:
-    """One schedulable unit of the compiled forward.
+# ---------------------------------------------------------------------------
+# Graph (compiled path)
+# ---------------------------------------------------------------------------
 
-    ``fn(params, carry) -> carry`` is a pure function of the unit's OWN
-    param subtree (``params`` here), so a pipeline stage holds exactly its
-    units' constant weights and nothing else — the paper's persistent
-    per-chip network.  Every edge between units is the quantization-domain
-    pair ``(int8 activations, f32 scale[row])`` — the 8-bit inter-chip
-    link, with one independent scale PER IMAGE (per-row domains,
-    DESIGN.md §9) so serving may pack rows from different requests into
-    one microbatch without any row's bits depending on its neighbours —
-    except the f32 image into the stem and the f32 logits out of the head.
-    ``block_id`` indexes ``conv_blocks_for``'s block list (stem = 0) so
-    ``partition.StagePlan``s map 1:1 onto units; the head rides the last
-    stage (``block_id`` -1).
+def resnet_graph(cfg: ResNetConfig) -> Graph:
+    """ResNet50 as a conv-DAG (models/graph.py): the stem unit (quant →
+    7x7/s2 conv → maxpool → quant), one unit per bottleneck block — the
+    projection (b==0) or identity-dequant shortcut feeding the c-conv's
+    Collector epilogue, a/b convs emitting int8 in-block (quant_out), a
+    producer-side quant on the block edge — and the classifier head.
+
+    The graph's articulation cuts land exactly on the stem/block/head
+    boundaries the hand-rolled ``compiled_units`` used, so stage plans,
+    unit names ("stem", "conv2_x_1", ..., "head"), and sparsity aux keys
+    ("stem", "conv2_x_1/a", ...) are unchanged — and the compiled forward
+    is bit-identical to the pre-graph path (tested).
     """
-
-    name: str
-    block_id: int
-    params: dict
-    fn: object
-
-
-def _row_scale(s):
-    """Broadcast a per-row ``(N,)`` scale (or a scalar) over NHWC values."""
-    return jnp.asarray(s).reshape((-1,) + (1,) * 3)
-
-
-def _stem_unit(p, x):
-    x_q, s = act_quant(x, per_row=True)
-    h = _conv_q(p, x_q, s, relu=True)
-    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
-                              (1, 2, 2, 1), "SAME")
-    return act_quant(h, per_row=True)
-
-
-def _block_unit(p, carry):
-    h_q, s_h = carry
-    sc = (_conv_q(p["sc"], h_q, s_h, relu=False) if "sc" in p
-          else h_q.astype(jnp.float32) * _row_scale(s_h))
-    a_q, s_a = _conv_q(p["a"], h_q, s_h, quant_out=True)
-    b_q, s_b = _conv_q(p["b"], a_q, s_a, quant_out=True)
-    h = _conv_q(p["c"], b_q, s_b, shortcut=sc, relu=True)
-    return act_quant(h, per_row=True)
-
-
-def _head_unit(p, carry):
-    h_q, s_h = carry
-    pooled = jnp.mean(h_q.astype(jnp.float32) * _row_scale(s_h),
-                      axis=(1, 2))
-    # per_row: the head's input quantization must not couple rows either,
-    # or a request's logits would depend on its microbatch neighbours
-    return apply_linear(p["w"], pooled, per_row=True)
-
-
-def _stem_unit_profiled(g):
-    """Sparsity-profiled stem: same math, plus the post-ReLU zero-count
-    aux of the stem conv.  Profiled unit fns return ``(carry, aux)``;
-    the zero counts are observation-only so the carry is bit-identical
-    to the unprofiled unit's (tested)."""
-    def fn(p, x):
-        x_q, s = act_quant(x, per_row=True)
-        h, zc = _conv_q(p, x_q, s, relu=True, zero_count=g)
-        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
-                                  (1, 2, 2, 1), "SAME")
-        return act_quant(h, per_row=True), {"stem": zc}
-    return fn
-
-
-def _block_unit_profiled(name, g):
-    """Sparsity-profiled residual block: zero counts for the three
-    ReLU-output convs (a, b, and the post-shortcut c).  The projection
-    shortcut has no ReLU — its output isn't a post-ReLU sparsity
-    candidate — so it stays unprofiled."""
-    def fn(p, carry):
-        h_q, s_h = carry
-        sc = (_conv_q(p["sc"], h_q, s_h, relu=False) if "sc" in p
-              else h_q.astype(jnp.float32) * _row_scale(s_h))
-        a_q, s_a, zc_a = _conv_q(p["a"], h_q, s_h, quant_out=True,
-                                 zero_count=g)
-        b_q, s_b, zc_b = _conv_q(p["b"], a_q, s_a, quant_out=True,
-                                 zero_count=g)
-        h, zc_c = _conv_q(p["c"], b_q, s_b, shortcut=sc, relu=True,
-                          zero_count=g)
-        return act_quant(h, per_row=True), {f"{name}/a": zc_a,
-                                            f"{name}/b": zc_b,
-                                            f"{name}/c": zc_c}
-    return fn
-
-
-def _head_unit_profiled(p, carry):
-    return _head_unit(p, carry), {}    # no conv, nothing to profile
+    w0 = max(8, int(64 * cfg.width_mult))
+    nodes = [
+        Node("image", "input"),
+        Node("stem_in", "quant", ("image",), unit="stem"),
+        Node("stem", "conv", ("stem_in",), path=("stem",), k=7, stride=2,
+             c_in=3, c_out=w0),
+        Node("stem_pool", "pool", ("stem",), k=3, stride=2),
+        Node("stem_q", "quant", ("stem_pool",)),
+    ]
+    prev, in_ch = "stem_q", w0
+    for i in range(4):
+        name, n_blocks, mid, out, _ = cfg.stage(i)
+        for b in range(n_blocks):
+            u = f"{name}_{b+1}"
+            stride = _block_stride(name, b)
+            if b == 0:                       # projection shortcut (no ReLU)
+                sc = f"{u}/sc"
+                nodes.append(Node(sc, "conv", (prev,), path=(name, b, "sc"),
+                                  k=1, stride=stride, c_in=in_ch, c_out=out,
+                                  relu=False, unit=u))
+            else:                            # identity: dequant the block input
+                sc = f"{u}/id"
+                nodes.append(Node(sc, "dequant", (prev,), unit=u))
+            nodes.append(Node(f"{u}/a", "conv", (prev,), path=(name, b, "a"),
+                              k=1, stride=stride, c_in=in_ch, c_out=mid,
+                              quant_out=True))
+            nodes.append(Node(f"{u}/b", "conv", (f"{u}/a",),
+                              path=(name, b, "b"), k=3, c_in=mid, c_out=mid,
+                              quant_out=True))
+            nodes.append(Node(f"{u}/c", "conv", (f"{u}/b",),
+                              path=(name, b, "c"), k=1, c_in=mid, c_out=out,
+                              shortcut=sc))
+            nodes.append(Node(f"{u}/q", "quant", (f"{u}/c",)))
+            prev, in_ch = f"{u}/q", out
+    nodes.append(Node("head", "head", (prev,), path=("head",)))
+    return Graph("resnet50", tuple(nodes), cfg.in_hw, 3, cfg.num_classes)
 
 
 def compiled_units(params, cfg: ResNetConfig,
                    sparsity_groups: int | None = None) -> list:
     """The compiled forward as an ordered list of pipeline units: the stem
-    (conv + maxpool), each residual block, and the classifier head.
+    (conv + maxpool), each residual block, and the classifier head — now a
+    thin wrapper over the DAG-general ``graph.compile_graph``.
 
     ``sparsity_groups`` opts every ReLU-output conv into activation-
     sparsity profiling at that coarse_in group size: unit fns then
     return ``(carry, {layer: zero-count aux})`` instead of a bare carry
     (obs/sparsity.py aggregates).  Carries are bit-identical either way.
     """
-    g = sparsity_groups
-    units = [PipelineUnit("stem", 0, params["stem"],
-                          _stem_unit if g is None else _stem_unit_profiled(g))]
-    bid = 1
-    for i in range(4):
-        name = cfg.stage(i)[0]
-        for b, blk in enumerate(params[name]):
-            uname = f"{name}_{b+1}"
-            units.append(PipelineUnit(
-                uname, bid, blk,
-                _block_unit if g is None else _block_unit_profiled(uname, g)))
-            bid += 1
-    units.append(PipelineUnit(
-        "head", -1, params["head"],
-        _head_unit if g is None else _head_unit_profiled))
-    return units
+    return compile_graph(resnet_graph(cfg), params, sparsity_groups)
 
 
 def _apply_compiled(params, x, cfg: ResNetConfig):

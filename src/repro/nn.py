@@ -78,7 +78,11 @@ def conv_kind(k: int, stride: int) -> str:
 
 
 def conv_geom_of(kind) -> tuple | None:
-    """(k, stride) of a conv kind, or None for non-conv kinds."""
+    """(k, stride) of a conv kind, or None for non-conv kinds.
+
+    ``dwconv...`` kinds do NOT start with ``conv``, so depthwise weights
+    never mis-parse as dense convs here — they have their own
+    ``dwconv_geom_of`` and a distinct compiled storage shape."""
     if isinstance(kind, str) and kind.startswith("conv"):
         ks, _, ss = kind[4:].partition("s")
         if ks.isdigit() and ss.isdigit():
@@ -86,9 +90,24 @@ def conv_geom_of(kind) -> tuple | None:
     return None
 
 
+def dwconv_kind(k: int, stride: int) -> str:
+    """Param kind for a depthwise conv weight (groups == channels)."""
+    return f"dwconv{k}s{stride}"
+
+
+def dwconv_geom_of(kind) -> tuple | None:
+    """(k, stride) of a depthwise conv kind, or None otherwise."""
+    if isinstance(kind, str) and kind.startswith("dwconv"):
+        ks, _, ss = kind[6:].partition("s")
+        if ks.isdigit() and ss.isdigit():
+            return int(ks), int(ss)
+    return None
+
+
 def compilable(kind) -> bool:
     """Kinds eligible for constant-parameter compilation."""
-    return kind == "linear" or conv_geom_of(kind) is not None
+    return (kind == "linear" or conv_geom_of(kind) is not None
+            or dwconv_geom_of(kind) is not None)
 
 
 def conv_param(key, c_in, c_out, k, stride, axes, dtype=jnp.float32,
@@ -97,6 +116,14 @@ def conv_param(key, c_in, c_out, k, stride, axes, dtype=jnp.float32,
     (channel-major), carrying its (k, stride) geometry in the kind."""
     return param(key, (c_in * k * k, c_out), axes, dtype, "normal", scale,
                  kind=conv_kind(k, stride))
+
+
+def dwconv_param(key, c, k, stride, axes, dtype=jnp.float32, scale=None):
+    """A depthwise conv weight, stored (k*k, c) in tap-major row order —
+    already the depthwise kernel's consumption layout (one (c,) weight row
+    per receptive-field tap), so compilation needs no layout shuffle."""
+    return param(key, (k * k, c), axes, dtype, "normal", scale,
+                 kind=dwconv_kind(k, stride))
 
 
 def unbox(tree: PyTree) -> PyTree:

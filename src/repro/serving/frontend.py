@@ -51,8 +51,8 @@ the kernels do, so it gets its own component.
 * **Front-door validation** — ``submit`` rejects malformed requests with
   a clear ``ValueError`` (mirroring ``ServingEngine.submit``'s
   hardening) instead of shape-erroring deep inside a packed microbatch:
-  images must be float-castable, rank-4 ``(n, H, W, 3)`` with
-  ``H == W == cfg.in_hw``, and finite.  It also rejects re-submission of
+  images must be float-castable, rank-4, matching the compiled graph's
+  entry-node geometry ``(n, H, W, C)``, and finite.  It also rejects re-submission of
   a request object that is still queued or in flight, and a duplicate
   ``rid`` among live requests — both used to silently reset the victim's
   dispatch accounting mid-flight.
@@ -80,7 +80,6 @@ import numpy as np
 
 from repro.core.compiled_linear import ensure_compiled
 from repro.launch.mesh import replica_pipeline_devices
-from repro.models import resnet
 from repro.obs.metrics import LIFE, MetricsRegistry, percentile
 from repro.serving.faults import ReplicaFailure
 from repro.serving.pipeline import PipelineEngine, PipelineRequest
@@ -137,9 +136,14 @@ def _percentile(xs, q: float) -> float | None:
 
 class ResNetFrontend:
     """Admission queue + least-loaded routing over N pipeline replicas,
-    with failure recovery and SLO-aware shedding."""
+    with failure recovery and SLO-aware shedding.
 
-    def __init__(self, cfg: resnet.ResNetConfig, params, *,
+    Despite the historical name, the front door serves any model exposing
+    the zoo protocol (``cfg.graph()``/``cfg.apply()``, DESIGN.md §12) —
+    the expected input geometry is derived from the compiled graph's
+    entry node, not hardcoded."""
+
+    def __init__(self, cfg, params, *,
                  mode: str = "int8", sparsity: float = 0.8,
                  n_replicas: int = 2, n_stages: int = 1,
                  stage_blocks=None, plan=None, microbatch: int = 2,
@@ -151,6 +155,7 @@ class ResNetFrontend:
                  clock=time.perf_counter, telemetry=None):
         assert n_replicas >= 1, n_replicas
         self.cfg = cfg
+        self._in_shape = cfg.graph().in_shape()
         self.microbatch = microbatch
         self.continuous = continuous
         self.telemetry = telemetry
@@ -299,14 +304,17 @@ class ResNetFrontend:
             raise ValueError(
                 f"request {req.rid}: images must be castable to float32 "
                 f"(got {type(req.images).__name__}: {e})") from None
-        hw = self.cfg.in_hw
-        if images.ndim != 4 or images.shape[1:] != (hw, hw, 3):
+        # expected geometry comes from the compiled graph's entry node,
+        # not a hardcoded 224x224x3: the fleet serves whatever model the
+        # config's graph describes (regression: tests/test_graph.py)
+        want = self._in_shape
+        if images.ndim != 4 or images.shape[1:] != want:
             raise ValueError(
                 f"request {req.rid}: images must have shape "
-                f"(n, {hw}, {hw}, 3) — rows from different requests are "
-                f"packed into one microbatch, so every request must match "
-                f"the model's input geometry exactly; got "
-                f"{images.shape}")
+                f"(n, {want[0]}, {want[1]}, {want[2]}) — rows from "
+                f"different requests are packed into one microbatch, so "
+                f"every request must match the model's input geometry "
+                f"exactly; got {images.shape}")
         if images.size and not np.isfinite(images).all():
             raise ValueError(
                 f"request {req.rid}: images contain NaN/Inf pixels — a "

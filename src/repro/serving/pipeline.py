@@ -1,5 +1,7 @@
-"""Pipeline-parallel ResNet serving engine — persistent per-stage weights,
-microbatched requests, the executable Fig 7.
+"""Pipeline-parallel conv-DAG serving engine — persistent per-stage
+weights, microbatched requests, the executable Fig 7.  Serves any model
+exposing the zoo protocol (``cfg.graph()``/``cfg.apply()`` —
+DESIGN.md §12): ResNet50, MobileNetV2, fused RepVGG.
 
 Mirrors ``serving/engine.py``'s submit/step/run surface for the CNN path:
 requests carry image batches, the engine splits them into rows, and a
@@ -37,7 +39,7 @@ import numpy as np
 from repro.core import partition
 from repro.core.compiled_linear import ensure_compiled
 from repro.distributed.conv_pipeline import ConvPipeline, PipelineStage
-from repro.models import resnet
+from repro.models.graph import compile_graph
 from repro.obs.metrics import LIFE, MetricsRegistry
 
 
@@ -104,7 +106,7 @@ def reference_logits(params, cfg, x, microbatch: int):
         # zero-row input: jnp.concatenate over no microbatches would
         # raise — return the empty logits directly
         return jnp.zeros((0, cfg.num_classes), jnp.float32)
-    fn = jax.jit(lambda p, mb: resnet.apply(p, mb, cfg))
+    fn = jax.jit(lambda p, mb: cfg.apply(p, mb))
     mbs = [x[i:i + microbatch] for i in range(0, x.shape[0], microbatch)]
     return jnp.concatenate([fn(params, mb) for mb in mbs])
 
@@ -124,7 +126,7 @@ def reference_profile(params, cfg, x, microbatch: int, groups: int,
     import os
     from repro.obs.sparsity import SparsityProfiler
     prof = SparsityProfiler(groups=groups)
-    units = resnet.compiled_units(params, cfg, sparsity_groups=groups)
+    units = compile_graph(cfg.graph(), params, sparsity_groups=groups)
     unit_fns = tuple(u.fn for u in units)
     unit_ps = tuple(u.params for u in units)
 
@@ -158,9 +160,16 @@ def reference_profile(params, cfg, x, microbatch: int, groups: int,
 
 
 class PipelineEngine:
-    """Persistent pipeline-parallel serving of the compiled ResNet."""
+    """Persistent pipeline-parallel serving of any compiled conv-DAG.
 
-    def __init__(self, cfg: resnet.ResNetConfig, params, *,
+    ``cfg`` is any model config exposing the zoo protocol — ``graph()``
+    (a ``models.graph.Graph``), ``apply(params, x)``, and
+    ``num_classes`` — e.g. ``ResNetConfig``, ``MobileNetV2Config``, or
+    ``RepVGGConfig`` (fused params).  The engine compiles the graph into
+    pipeline units and plans stages from the graph's own per-unit conv
+    specs and cut-edge byte counts."""
+
+    def __init__(self, cfg, params, *,
                  mode: str = "int8", sparsity: float = 0.8,
                  n_stages: int | None = None, stage_blocks=None, plan=None,
                  microbatch: int = 2, devices=None, replica: int = 0,
@@ -192,8 +201,9 @@ class PipelineEngine:
         # programs (units return (carry, aux)); off by default
         groups = (telemetry.sparsity.groups
                   if telemetry is not None and telemetry.profiled else None)
-        units = resnet.compiled_units(self.params, cfg,
-                                      sparsity_groups=groups)
+        self.graph = cfg.graph()
+        units = compile_graph(self.graph, self.params,
+                              sparsity_groups=groups)
         self._profiled = groups is not None
         n_blocks = len(units) - 1              # head rides the last stage
         self.plan = self._resolve_plan(plan, stage_blocks, n_stages,
@@ -222,16 +232,18 @@ class PipelineEngine:
     # -- stage planning -------------------------------------------------
     def _resolve_plan(self, plan, stage_blocks, n_stages, n_blocks,
                       devices):
-        blocks = resnet.conv_blocks_for(self.cfg)
+        blocks = self.graph.blocks()
+        edge_bytes = self.graph.edge_bytes()
         assert len(blocks) == n_blocks, (len(blocks), n_blocks)
         if isinstance(plan, partition.PartitionResult):
             want = n_stages or (len(devices) if devices else None)
-            return plan.stage_plans(blocks, want)
+            return plan.stage_plans(blocks, want, edge_bytes)
         if plan is not None:                   # explicit StagePlan list
             return list(plan)
         if stage_blocks is not None:           # explicit stage map
-            return partition.explicit_stage_plans(blocks, stage_blocks)
-        return partition.plan_stages(blocks, n_stages or 1)
+            return partition.explicit_stage_plans(blocks, stage_blocks,
+                                                  edge_bytes)
+        return partition.plan_stages(blocks, n_stages or 1, edge_bytes)
 
     @staticmethod
     def _resolve_devices(devices, n_stages):

@@ -1,0 +1,328 @@
+"""Graph IR + model zoo (DESIGN.md §12): topological determinism, DAG
+cuts, ResNet bit-identity vs the pre-graph hand-rolled units, RepVGG
+branch-fusion equivalence, depthwise-vs-oracle agreement, the
+graph-derived frontend input geometry, and the expansion config field."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core import compiled_linear as cl
+from repro.core import partition
+from repro.kernels import ops
+from repro.models import mobilenet_v2 as mb
+from repro.models import repvgg, resnet
+from repro.models.graph import Graph, GraphError, Node, compile_graph
+
+R_CFG = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+M_CFG = mb.MobileNetV2Config(width_mult=0.125, num_classes=4, in_hw=16)
+V_CFG = repvgg.RepVGGConfig(width_mult=0.125, num_classes=4, in_hw=16)
+
+
+# ---------------------------------------------------------------------------
+# Graph structure
+# ---------------------------------------------------------------------------
+
+def test_topo_order_deterministic_and_stable():
+    """Kahn order is insertion-priority deterministic: repeated calls are
+    identical, a builder declaring nodes in dataflow order compiles to
+    exactly that order, and declaring independent nodes in a different
+    order yields the declaration order among ready nodes."""
+    g = resnet.resnet_graph(R_CFG)
+    order = [n.name for n in g.topo_order()]
+    assert order == [n.name for n in g.topo_order()]
+    assert order[:5] == ["image", "stem_in", "stem", "stem_pool", "stem_q"]
+    # the projection shortcut and the a-conv are both ready after stem_q;
+    # the earlier-declared sc runs first
+    assert order[5:7] == ["conv2_x_1/sc", "conv2_x_1/a"]
+    # permuting two independent declarations flips only their mutual order
+    n = {x.name: x for x in g.nodes}
+    swapped = list(g.nodes)
+    i, j = swapped.index(n["conv2_x_1/sc"]), swapped.index(n["conv2_x_1/a"])
+    swapped[i], swapped[j] = swapped[j], swapped[i]
+    g2 = Graph(g.name, tuple(swapped), g.in_hw, g.in_ch, g.num_classes)
+    assert [x.name for x in g2.topo_order()][5:7] == ["conv2_x_1/a",
+                                                      "conv2_x_1/sc"]
+
+
+def test_graph_validation_errors():
+    base = (Node("image", "input"),
+            Node("q", "quant", ("image",)),
+            Node("c", "conv", ("q",), k=3, c_in=3, c_out=8, quant_out=True),
+            Node("head", "head", ("c",)))
+    Graph("ok", base, 8, 3, 4).shapes()          # sane baseline
+    with pytest.raises(GraphError, match="duplicate"):
+        Graph("bad", base + (Node("c", "conv", ("q",)),), 8, 3, 4)
+    with pytest.raises(GraphError, match="unknown input"):
+        Graph("bad", base[:2] + (Node("c", "conv", ("ghost",)),), 8, 3, 4)
+    with pytest.raises(GraphError, match="cycle"):
+        Graph("bad", (Node("image", "input"),
+                      Node("a", "quant", ("b",)),
+                      Node("b", "quant", ("a",))), 8, 3, 4).topo_order()
+    with pytest.raises(GraphError, match="c_in"):
+        Graph("bad", (Node("image", "input"), Node("q", "quant", ("image",)),
+                      Node("c", "conv", ("q",), k=3, c_in=5, c_out=8)),
+              8, 3, 4).shapes()
+    with pytest.raises(GraphError, match="c_out == c_in"):
+        Graph("bad", (Node("image", "input"), Node("q", "quant", ("image",)),
+                      Node("c", "dwconv", ("q",), k=3, c_in=3, c_out=8)),
+              8, 3, 4).shapes()
+    with pytest.raises(GraphError, match="conv consumes"):
+        Graph("bad", (Node("image", "input"),
+                      Node("c", "conv", ("image",), k=3, c_in=3, c_out=8)),
+              8, 3, 4).shapes()
+    # a conv past the last quantization-domain cut cannot form a head unit
+    with pytest.raises(GraphError, match="conv-free"):
+        Graph("bad", (Node("image", "input"), Node("q", "quant", ("image",)),
+                      Node("c1", "conv", ("q",), k=3, c_in=3, c_out=8,
+                           quant_out=True),
+                      Node("c2", "conv", ("c1",), k=3, c_in=8, c_out=8,
+                           quant_out=True),
+                      Node("head", "head", ("c1",))), 8, 3, 4).units()
+
+
+def test_resnet_graph_cuts_match_legacy_units(monkeypatch):
+    """The articulation cuts land exactly on the old stem/block/head
+    boundaries: same unit names, same block ids, one unit per residual
+    block."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = nn.unbox(cl.compile_params(R_CFG.init(jax.random.PRNGKey(0)),
+                                        mode="int8"))
+    units = compile_graph(R_CFG.graph(), params)
+    assert [(u.name, u.block_id) for u in units[:2]] == [("stem", 0),
+                                                         ("conv2_x_1", 1)]
+    assert units[-1].name == "head" and units[-1].block_id == -1
+    assert len(units) == 18
+    # sparsity aux keys keep the legacy layer names
+    punits = compile_graph(R_CFG.graph(), params, sparsity_groups=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    carry, aux = punits[0].fn(punits[0].params, x)
+    assert set(aux) == {"stem"}
+    carry, aux = punits[1].fn(punits[1].params, carry)
+    assert set(aux) == {"conv2_x_1/a", "conv2_x_1/b", "conv2_x_1/c"}
+
+
+def test_mobilenet_and_repvgg_cut_structure():
+    mg = M_CFG.graph()
+    names = [name for name, _ in mg.units()]
+    assert names[0] == "stem" and names[-1] == "head"
+    # residual blocks are ONE unit (the block input stays live for the
+    # shortcut); non-residual blocks split at their expand/dw edges
+    segs = dict(mg.units())
+    res_units = [n for n in names if n.startswith("block") and "." not in n]
+    assert any(len([m for m in segs[n] if m.op in ("conv", "dwconv")]) == 3
+               for n in res_units)          # expand+dw+project in one unit
+    assert any("." in n for n in names)     # and split non-residual blocks
+    vg = V_CFG.graph()
+    vnames = [name for name, _ in vg.units()]
+    # fused repvgg is a pure chain: one conv per unit, a cut on every edge
+    assert len(vnames) == len(repvgg.block_specs(V_CFG)) + 1
+    assert all(len([m for m in seg if m.op == "conv"]) == 1
+               for name, seg in vg.units()[:-1])
+
+
+def test_graph_edge_bytes_match_legacy_resnet_accounting():
+    """The graph's cut-edge byte counts equal the legacy ResNet-specific
+    ``edge_bytes_after_block`` (incl. the stem-maxpool special case), so
+    graph-planned stages keep the exact link accounting the Fig 7 tests
+    pin down."""
+    g = R_CFG.graph()
+    blocks = resnet.conv_blocks_for(R_CFG)
+    legacy = [partition.edge_bytes_after_block(blocks, j)
+              for j in range(len(blocks))]
+    assert g.edge_bytes() == legacy
+    # and plans built from graph blocks + edge bytes carry those bytes
+    plans = partition.plan_stages(g.blocks(), 3, g.edge_bytes())
+    for p in plans[:-1]:
+        assert p.link_bytes == legacy[p.block_ids[-1]]
+    assert plans[-1].link_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# ResNet: graph path bit-identical to the pre-graph hand-rolled units
+# ---------------------------------------------------------------------------
+
+def _legacy_unit_chain(params, cfg):
+    """The pre-graph compiled forward, reproduced verbatim from the old
+    hand-rolled ``resnet._stem_unit``/``_block_unit``/``_head_unit`` —
+    the bit-identity pin for the graph refactor."""
+    def row_scale(s):
+        return jnp.asarray(s).reshape((-1,) + (1,) * 3)
+
+    def stem(p, x):
+        x_q, s = cl.act_quant(x, per_row=True)
+        h = resnet._conv_q(p, x_q, s, relu=True)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                  (1, 2, 2, 1), "SAME")
+        return cl.act_quant(h, per_row=True)
+
+    def block(p, carry):
+        h_q, s_h = carry
+        sc = (resnet._conv_q(p["sc"], h_q, s_h, relu=False) if "sc" in p
+              else h_q.astype(jnp.float32) * row_scale(s_h))
+        a_q, s_a = resnet._conv_q(p["a"], h_q, s_h, quant_out=True)
+        b_q, s_b = resnet._conv_q(p["b"], a_q, s_a, quant_out=True)
+        h = resnet._conv_q(p["c"], b_q, s_b, shortcut=sc, relu=True)
+        return cl.act_quant(h, per_row=True)
+
+    def head(p, carry):
+        h_q, s_h = carry
+        pooled = jnp.mean(h_q.astype(jnp.float32) * row_scale(s_h),
+                          axis=(1, 2))
+        return cl.apply_linear(p["w"], pooled, per_row=True)
+
+    fns = [lambda c, p=params["stem"]: stem(p, c)]
+    for i in range(4):
+        for blk in params[cfg.stage(i)[0]]:
+            fns.append(lambda c, p=blk: block(p, c))
+    fns.append(lambda c, p=params["head"]: head(p, c))
+    return fns
+
+
+@pytest.mark.parametrize("mode", ["int8", "sparse_cfmm"])
+def test_resnet_graph_bit_identical_to_legacy_units(monkeypatch, mode):
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = nn.unbox(cl.compile_params(R_CFG.init(jax.random.PRNGKey(0)),
+                                        mode=mode, sparsity=0.5))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    units = compile_graph(R_CFG.graph(), params)
+    legacy = _legacy_unit_chain(params, R_CFG)
+    assert len(units) == len(legacy)
+    carry_g, carry_l = x, x
+    for u, lf in zip(units, legacy):
+        carry_g = u.fn(u.params, carry_g)
+        carry_l = lf(carry_l)
+        for got, want in zip(jax.tree.leaves(carry_g),
+                             jax.tree.leaves(carry_l)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert carry_g.shape == (2, R_CFG.num_classes)
+
+
+# ---------------------------------------------------------------------------
+# RepVGG: compile-time branch fusion
+# ---------------------------------------------------------------------------
+
+def test_repvgg_embed_equals_true_1x1_at_stride_1():
+    """At stride 1 (SAME pad 1 each side for k=3) the center-embedded 1x1
+    weight IS the 1x1 conv — the algebra behind the fold."""
+    key = jax.random.PRNGKey(0)
+    c_in, c_out = 8, 16
+    w1 = jax.random.normal(key, (c_in, c_out))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 7, 9, c_in))
+    p1 = {"w": w1, "scale": jnp.ones(c_out), "bias": jnp.zeros(c_out)}
+    p3 = {"w": repvgg.embed_1x1(w1, c_in), "scale": jnp.ones(c_out),
+          "bias": jnp.zeros(c_out)}
+    got = resnet._conv_apply(p3, x, 3, 1, relu=False)
+    want = resnet._conv_apply(p1, x, 1, 1, relu=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_repvgg_fusion_matches_unfused_reference():
+    """fuse_params folds 3x3 + 1x1 + identity (and their per-channel
+    scales/biases) into one 3x3 conv per block: the fused dense forward
+    matches the three-branch reference to fp tolerance, end to end over
+    stride-2, identity, and non-identity blocks."""
+    params = V_CFG.init(jax.random.PRNGKey(0))
+    fused = V_CFG.fuse(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3)) * 0.5
+    want = V_CFG.apply(nn.unbox(params), x)
+    got = V_CFG.apply(nn.unbox(fused), x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # the A0 chain really exercises all three block flavours
+    specs = repvgg.block_specs(V_CFG)
+    assert any(s[4] for s in specs) and any(not s[4] for s in specs)
+    assert any(s[3] == 2 for s in specs)
+
+
+def test_repvgg_fused_compiled_bit_identical_across_lowerings(monkeypatch):
+    params = cl.compile_params(V_CFG.fuse(V_CFG.init(jax.random.PRNGKey(0))),
+                               mode="int8")
+    params = nn.unbox(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    outs = {}
+    for lowering in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", lowering)
+        outs[lowering] = np.asarray(V_CFG.apply(params, x))
+    np.testing.assert_array_equal(outs["jnp"], outs["interpret"])
+
+
+# ---------------------------------------------------------------------------
+# Depthwise kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strip_h", [None, 1, 2])
+@pytest.mark.parametrize("k,stride", [(3, 1), (3, 2)])
+def test_depthwise_bit_identical_across_strip_tilings(monkeypatch, k,
+                                                      stride, strip_h):
+    """The Pallas tap-MAC depthwise kernel (interpret) agrees bit-exactly
+    with the jnp oracle for every strip tiling, quantized output and
+    per-row scales included."""
+    key = jax.random.PRNGKey(k + 10 * stride)
+    C, H, W = 16, 7, 9
+    x_q = jax.random.randint(key, (2, H, W, C), -127, 128, jnp.int8)
+    w = jax.random.randint(jax.random.PRNGKey(1), (k * k, C), -63, 64,
+                           jnp.int8)
+    x_s = jnp.asarray([0.013, 0.021])           # per-row domains
+    w_s = 0.02 * jnp.ones((1, C))
+    outs = {}
+    for lowering in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", lowering)
+        outs[lowering] = ops.conv2d_dw(
+            x_q, w, k, stride, x_scale=x_s, w_scale=w_s,
+            gamma=jnp.ones(C), beta=jnp.zeros(C), relu=True,
+            quant_out=True, strip_h=strip_h)
+    for got, want in zip(jax.tree.leaves(outs["interpret"]),
+                         jax.tree.leaves(outs["jnp"])):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Frontend input geometry (regression: was hardcoded 224x224x3-style
+# cfg.in_hw with channel 3 fixed)
+# ---------------------------------------------------------------------------
+
+def test_frontend_validates_against_graph_geometry(monkeypatch):
+    from repro.serving.frontend import FrontendRequest, ResNetFrontend
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    params = nn.unbox(cl.compile_params(M_CFG.init(jax.random.PRNGKey(0)),
+                                        mode="int8"))
+    fe = ResNetFrontend(M_CFG, params, mode="int8", n_replicas=1,
+                        n_stages=1, microbatch=2)
+    ok = FrontendRequest(rid=1, images=np.zeros((1, 16, 16, 3), np.float32))
+    fe.run([ok])
+    assert ok.done and ok.logits.shape == (1, 4)
+    with pytest.raises(ValueError, match=r"\(n, 16, 16, 3\)"):
+        fe.submit(FrontendRequest(
+            rid=2, images=np.zeros((1, 224, 224, 3), np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# ResNetConfig.expansion satellite
+# ---------------------------------------------------------------------------
+
+def test_resnet_expansion_config_field():
+    cfg = resnet.ResNetConfig(width_mult=0.125, expansion=2)
+    for i in range(4):
+        name, _, mid, out, _ = cfg.stage(i)
+        assert out == max(8, 2 * mid) or out == 8
+    # default matches Table I exactly
+    cfg4 = resnet.ResNetConfig()
+    assert [cfg4.stage(i)[3] for i in range(4)] == [256, 512, 1024, 2048]
+    with pytest.raises(ValueError, match="expansion"):
+        resnet.ResNetConfig(expansion=0)
+    resnet.table1()                                  # expansion=4 fine
+    with pytest.raises(ValueError, match="expansion\\*mid"):
+        resnet.table1(expansion=2)
+
+
+def test_resnet_nondefault_expansion_serves(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    cfg = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8,
+                              expansion=2)
+    params = cl.compile_params(cfg.init(jax.random.PRNGKey(0)), mode="int8")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    out = cfg.apply(nn.unbox(params), x)
+    assert out.shape == (2, 4) and bool(jnp.isfinite(out).all())

@@ -100,3 +100,64 @@ def test_block_modes_within_quant_tolerance_of_dense(mode):
     got, _, _ = _block_forward(served, x, k, stride)
     rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
     assert rel < 0.08, (mode, rel)
+
+
+# ---------------------------------------------------------------------------
+# Model-zoo matrix: every zoo member x serve mode x lowering (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+from repro.models import mobilenet_v2 as mb      # noqa: E402
+from repro.models import repvgg                  # noqa: E402
+
+ZOO = ("resnet50", "mobilenet_v2", "repvgg_a0")
+
+
+def _zoo_cfg_params(model):
+    """Tiny-width smoke config + servable (boxed) params per zoo member.
+    RepVGG serves its compile-time-fused single-branch form."""
+    if model == "resnet50":
+        cfg = resnet.ResNetConfig(width_mult=0.125, num_classes=4, in_hw=8)
+        return cfg, cfg.init(jax.random.PRNGKey(0))
+    if model == "mobilenet_v2":
+        cfg = mb.MobileNetV2Config(width_mult=0.125, num_classes=4,
+                                   in_hw=16)
+        return cfg, cfg.init(jax.random.PRNGKey(0))
+    cfg = repvgg.RepVGGConfig(width_mult=0.125, num_classes=4, in_hw=16)
+    return cfg, cfg.fuse(cfg.init(jax.random.PRNGKey(0)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ("int8", "cfmm", "sparse_cfmm"))
+@pytest.mark.parametrize("model", ZOO)
+def test_zoo_lowerings_agree(monkeypatch, model, mode):
+    """jnp oracle vs Pallas interpret, whole model end to end: every
+    activation edge is (int8, scale), so the final logits must agree
+    bit-exactly across lowerings for every zoo member x serve mode."""
+    cfg, raw = _zoo_cfg_params(model)
+    params = nn.unbox(cl.compile_params(raw, mode=mode, sparsity=0.5))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (2, cfg.in_hw, cfg.in_hw, 3))
+    outs = {}
+    for lowering in ("jnp", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS", lowering)
+        outs[lowering] = np.asarray(cfg.apply(params, x))
+    np.testing.assert_array_equal(outs["jnp"], outs["interpret"])
+    assert outs["jnp"].shape == (2, cfg.num_classes)
+    assert np.isfinite(outs["jnp"]).all()
+
+
+@pytest.mark.parametrize("mode", ("int8", "cfmm"))
+@pytest.mark.parametrize("model", ZOO)
+def test_zoo_compiled_tracks_reference(monkeypatch, model, mode):
+    """Whole-model quantization sanity per zoo member: the compiled
+    int8-edge forward stays within the block-level quant tolerance of its
+    own f32 reference (dense resnet/mobilenet; fused dense repvgg)."""
+    monkeypatch.setenv("REPRO_PALLAS", "jnp")
+    cfg, raw = _zoo_cfg_params(model)
+    compiled = nn.unbox(cl.compile_params(raw, mode=mode))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (2, cfg.in_hw, cfg.in_hw, 3)) * 0.5
+    got = np.asarray(cfg.apply(compiled, x))
+    want = np.asarray(cfg.apply(nn.unbox(raw), x))
+    rel = (np.linalg.norm(got - want)
+           / max(np.linalg.norm(want), 1e-9))
+    assert rel < 0.08, f"{model}/{mode}: rel={rel:.4f}"
